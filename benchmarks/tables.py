@@ -1,0 +1,57 @@
+"""Regenerate the EXPERIMENTS.md §Roofline / §Dry-run markdown tables from
+the cached dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.tables [--variant tp] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def rows_for(mesh: str, variant: str):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, f"*__{mesh}__{variant}.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    out.sort(key=lambda r: (r["arch"], ORDER[r["shape"]]))
+    return out
+
+
+def roofline_table(mesh: str, variant: str) -> str:
+    lines = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+             "| dominant | useful | peak GiB | compile s |",
+             "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for r in rows_for(mesh, variant):
+        m = r["memory"]
+        a = r.get("assembled")
+        if a:
+            t = a["terms"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} "
+                f"| {t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} "
+                f"| {t['dominant']} | {a['useful_ratio']:.2f} "
+                f"| {m['peak_gib']:.1f} | {r['compile_seconds']:.1f} |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                f"| {m['peak_gib']:.1f} | {r['compile_seconds']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16",
+                    choices=["16x16", "pod2x16x16"])
+    ap.add_argument("--variant", default="tp")
+    args = ap.parse_args()
+    print(roofline_table(args.mesh, args.variant))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""The paper's evaluation, end to end: train the CNN, deploy the full
+Stratus pipeline, and re-run the §III load tests (GET website swarm and
+POST prediction swarm) at the paper's three user counts — then run the
+beyond-paper optimized configuration next to it.
+
+    PYTHONPATH=src python examples/serve_digits.py
+"""
+import numpy as np
+
+from repro.core.pipeline import StratusPipeline
+from repro.serving.loadgen import LoadGenerator
+from repro.serving.server import AppConfig
+from repro.serving.sim import Clock
+
+print("training the pipeline model (reduced budget)...")
+pipe = StratusPipeline(strategy="sync", num_workers=5, seed=0)
+pipe.train(train_n=6_000, rounds=16, steps_per_round=2)
+predict = pipe.predict_fn()
+
+img = np.random.default_rng(0).random((28, 28, 1)).astype(np.float32)
+
+
+def run(kind, users, rate, cfg):
+    clock = Clock()
+    app = pipe.deploy(clock, app_cfg=cfg, seed=users)
+    issue = app.get_page if kind == "GET" else \
+        (lambda done: app.post_predict(img, done))
+    gen = LoadGenerator(clock, issue, users=users, spawn_rate=rate,
+                        duration=120.0, seed=users, kind=kind)
+    return gen.run()
+
+
+print("\n--- paper-faithful configuration (single-message consumer) ---")
+print("paper GET : 10u ~0%/2950ms | 25u 3%/7123ms | 50u 98%/306ms")
+for users, rate in [(10, 1), (25, 3), (50, 5)]:
+    print(run("GET", users, rate, AppConfig()).row())
+print("paper POST: 10u <1%/3040ms | 25u ~1%/7412ms")
+for users, rate in [(10, 1), (25, 3)]:
+    print(run("POST", users, rate, AppConfig()).row())
+
+print("\n--- beyond-paper: micro-batched consumer + p2c balancing ---")
+opt = AppConfig(max_batch=32, consume_base=0.05,
+                balancer_policy="power_of_two")
+for users, rate in [(25, 3), (50, 5)]:
+    print(run("POST", users, rate, opt).row())

@@ -1,0 +1,69 @@
+"""End-to-end LLM training driver: a ~100M-parameter model from the
+assigned-architecture pool, trained for a few hundred steps on the
+synthetic token stream until the loss visibly drops, with checkpointing
+and restore.
+
+The config is the qwen3 family scaled to ~100M (the assigned full configs
+are exercised via launch/dryrun.py — this demonstrates the training loop
+actually learning).
+
+    PYTHONPATH=src python examples/train_llm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import get_config
+from repro.core.trainer import make_train_step
+from repro.data.tokens import make_stream
+from repro.models.api import Model
+from repro.optim import adamw, cosine_warmup
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+# qwen3 family at ~100M: 8 layers, d=512, vocab 8192
+cfg = dataclasses.replace(
+    get_config("qwen3-0.6b"), num_layers=8, d_model=512, num_heads=8,
+    num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192,
+    max_position=4096, dtype="float32", name="qwen3-100m")
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+print(f"{cfg.name}: {n/1e6:.1f}M params, {args.steps} steps, "
+      f"batch {args.batch} x seq {args.seq}")
+
+opt = adamw(cosine_warmup(3e-4, 20, args.steps))
+opt_state = opt.init(params)
+step_fn = jax.jit(make_train_step(lambda p, b: model.loss(p, b), opt),
+                  donate_argnums=(0, 1))
+stream = make_stream(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+ckpt = CheckpointManager(tempfile.mkdtemp(prefix="repro_ckpt_"), keep=2)
+t0 = time.time()
+losses = []
+for step in range(args.steps):
+    batch = {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+    params, opt_state, m = step_fn(params, opt_state, batch)
+    losses.append(float(m["loss"]))
+    if step % 25 == 0 or step == args.steps - 1:
+        print(f"step {step:4d} loss {losses[-1]:.4f} "
+              f"({(time.time()-t0):.0f}s)", flush=True)
+    if (step + 1) % 100 == 0:
+        ckpt.save(step + 1, {"params": params})
+
+first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+      f"({time.time()-t0:.0f}s); checkpoints in {ckpt.root}")
+assert last < first - 0.5, "model failed to learn"
+step_r, restored = ckpt.restore_latest({"params": params})
+print(f"restore check: step {step_r} OK")

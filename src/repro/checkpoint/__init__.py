@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (latest_step, restore, save,
+                                    CheckpointManager)
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]

@@ -1,0 +1,8 @@
+"""Stratus core: distributed-training strategies (the paper's Spark/Elephas
+modes), the Trainer, and the end-to-end train->deploy->serve pipeline."""
+from repro.core.strategies import (ElasticAveraging, LocalSGD,
+                                   SyncDataParallel, make_strategy)
+from repro.core.trainer import Trainer, make_train_step, worker_batches
+
+__all__ = ["SyncDataParallel", "LocalSGD", "ElasticAveraging",
+           "make_strategy", "Trainer", "make_train_step", "worker_batches"]

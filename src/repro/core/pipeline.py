@@ -1,0 +1,112 @@
+"""The Stratus end-to-end pipeline object: train -> evaluate -> checkpoint
+-> deploy -> serve (paper Fig. 1, whole-system view).
+
+One call builds the entire thing the paper demos: a CNN distributed-trained
+with a Spark/Elephas-style strategy, checkpointed, wrapped in a jitted
+predict function, and mounted behind the cloud pipeline (NGINX balancer ->
+Kafka broker -> consumer -> CouchDB).  Used by examples/serve_digits.py and
+the benchmark suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.mnist_cnn import CNNConfig, CONFIG as MNIST_CNN
+from repro.core.strategies import make_strategy
+from repro.core.trainer import Trainer, worker_batches
+from repro.data import mnist
+from repro.models.cnn import cnn_forward, cnn_loss, cnn_schema
+from repro.models.module import init_params
+from repro.optim import adam
+from repro.serving.server import AppConfig, StratusApp
+from repro.serving.sim import Clock
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    train_seconds: float
+    rounds: int
+    train_loss: float
+    test_accuracy: float
+    canvas_accuracy: float
+    per_digit_canvas: Dict[int, float]
+
+
+class StratusPipeline:
+    """train -> checkpoint -> deploy -> serve."""
+
+    def __init__(self, cfg: CNNConfig = MNIST_CNN, *, strategy: str = "sync",
+                 num_workers: int = 5, ckpt_dir: Optional[str] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.strategy_name = strategy
+        self.num_workers = num_workers
+        self.seed = seed
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.params = init_params(cnn_schema(cfg), jax.random.PRNGKey(seed),
+                                  cfg.dtype)
+        self._loss_fn = lambda p, b: cnn_loss(p, cfg, b["x"], b["y"])
+
+    # ------------------------------------------------------------ train
+    def train(self, train_n: int = 12_000, rounds: int = 40,
+              steps_per_round: int = 2, log=lambda s: None) -> Dict[str, Any]:
+        """Paper Sec. II-C: batch 64, distributed over ``num_workers``
+        (5 Spark workers there).  Effective epochs scale with ``rounds``."""
+        cfg = self.cfg
+        x, y = mnist.make_split(train_n, self.seed)
+        strategy = make_strategy(self.strategy_name, adam(1e-3),
+                                 self.num_workers)
+        trainer = Trainer(strategy, self._loss_fn, ckpt=self.ckpt,
+                          ckpt_every=0, log_every=max(rounds // 4, 1))
+        it = worker_batches(x, y, self.num_workers, steps_per_round,
+                            cfg.batch_size, self.seed)
+        t0 = time.time()
+        self.params, _, history = trainer.fit(self.params, it, rounds, log=log)
+        train_time = time.time() - t0
+        if self.ckpt:
+            self.ckpt.save(rounds, {"params": self.params})
+        return {"seconds": train_time, "history": history}
+
+    # ------------------------------------------------------------ evaluate
+    def evaluate(self, test_n: int = 2_000, canvas_n: int = 1_000
+                 ) -> Dict[str, Any]:
+        fwd = jax.jit(lambda p, xb: cnn_forward(p, self.cfg, xb))
+        xt, yt = mnist.make_split(test_n, self.seed + 100)
+        pt = np.argmax(np.asarray(fwd(self.params, jnp.asarray(xt))), -1)
+        xc, yc = mnist.canvas_digits(canvas_n, self.seed + 200)
+        pc = np.argmax(np.asarray(fwd(self.params, jnp.asarray(xc))), -1)
+        per_digit = {d: float(np.mean(pc[yc == d] == d)) for d in range(10)}
+        return {
+            "test_accuracy": float(np.mean(pt == yt)),
+            "canvas_accuracy": float(np.mean(pc == yc)),
+            "per_digit_canvas": per_digit,
+        }
+
+    # ------------------------------------------------------------ deploy
+    def predict_fn(self) -> Callable[[np.ndarray], np.ndarray]:
+        params = self.params
+        cfg = self.cfg
+
+        @jax.jit
+        def fwd(xb):
+            return jax.nn.softmax(cnn_forward(params, cfg, xb), -1)
+
+        def predict(images: np.ndarray) -> np.ndarray:
+            return np.asarray(fwd(jnp.asarray(images, jnp.float32)))
+
+        # warm the shapes the consumer will use
+        for b in (1, 32):
+            predict(np.zeros((b, 28, 28, 1), np.float32))
+        return predict
+
+    def deploy(self, clock: Clock, app_cfg: AppConfig = None,
+               seed: int = 0) -> StratusApp:
+        return StratusApp(clock, self.predict_fn(),
+                          app_cfg or AppConfig(), seed=seed)

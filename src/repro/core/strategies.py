@@ -1,0 +1,189 @@
+"""Distributed-training strategies — the paper's Spark-ML/Elephas design
+space as first-class composable objects.
+
+The paper trains its CNN "in a distributed fashion using Spark" over 5
+workers (Sec. II-C).  Elephas (the Spark<->Keras bridge it uses) offers
+three synchronization policies; all three are implemented here faithfully,
+with the JVM/TCP transport replaced by JAX-native collectives (DESIGN.md
+§7.1 — the *policy* is the transferable insight, the transport is not):
+
+  SyncDataParallel    Elephas "synchronous": per-step gradient averaging.
+  LocalSGD            Elephas "asynchronous/delayed sync" made precise:
+                      K local steps per worker, then parameter averaging.
+  ElasticAveraging    EASGD (Zhang et al. 2015), Elephas's third mode:
+                      workers are elastically attracted to a center
+                      variable, the center moves toward the worker mean.
+
+Workers are a leading pytree axis, stepped with ``jax.vmap``; under a mesh
+the worker axis is sharded over ``data`` so the same code is one worker
+per device (the vmapped mean IS the all-reduce once SPMD-partitioned).
+The production path for the big configs (pjit + sharding constraints,
+``launch/train.py``) is mathematically SyncDataParallel.
+
+Every strategy exposes:
+    init(params)                               -> state
+    round(params, state, batches, loss_fn)     -> (params, state, metrics)
+where ``batches`` is a pytree with leading axis (W, K, B, ...) — W workers
+by K local steps — and ``loss_fn(params, batch) -> (loss, metrics)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+LossFn = Callable[[Any, Any], Tuple[jax.Array, Dict[str, jax.Array]]]
+
+
+def _worker_mean(tree):
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def _broadcast(tree, w: int):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), tree)
+
+
+def _local_step(opt: Optimizer, loss_fn: LossFn, clip: float):
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if clip:
+            grads, gnorm = clip_by_global_norm(grads, clip)
+            metrics = {**metrics, "grad_norm": gnorm}
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class SyncDataParallel:
+    """Per-step gradient all-reduce (Elephas synchronous mode).
+
+    Each of the K steps in a round: every worker computes grads on its own
+    microbatch; grads are averaged; ONE shared parameter copy advances.
+    """
+
+    optimizer: Optimizer
+    num_workers: int
+    clip: float = 0.0
+
+    def init(self, params):
+        return {"opt": self.optimizer.init(params)}
+
+    def round(self, params, state, batches, loss_fn: LossFn):
+        def one_step(carry, kbatch):
+            params, opt_state = carry
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+            (losses, metrics), grads = jax.vmap(grad_fn, in_axes=(None, 0))(
+                params, kbatch)
+            grads = _worker_mean(grads)
+            if self.clip:
+                grads, _ = clip_by_global_norm(grads, self.clip)
+            upd, opt_state = self.optimizer.update(grads, opt_state, params)
+            return (apply_updates(params, upd), opt_state), {
+                "loss": jnp.mean(losses)}
+
+        kb = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batches)  # (K,W,...)
+        (params, opt_state), ms = jax.lax.scan(
+            one_step, (params, state["opt"]), kb)
+        return params, {"opt": opt_state}, {"loss": ms["loss"][-1]}
+
+
+@dataclasses.dataclass
+class LocalSGD:
+    """K local steps per worker, then parameter averaging (post-local SGD;
+    Elephas's delayed-sync mode with a precise sync period)."""
+
+    optimizer: Optimizer
+    num_workers: int
+    clip: float = 0.0
+
+    def init(self, params):
+        w = self.num_workers
+        params_w = _broadcast(params, w)
+        return {
+            "params_w": params_w,
+            "opt_w": jax.vmap(self.optimizer.init)(params_w),
+        }
+
+    def round(self, params, state, batches, loss_fn: LossFn):
+        step = _local_step(self.optimizer, loss_fn, self.clip)
+
+        def worker_run(wparams, wopt, wbatches):
+            def body(carry, batch):
+                p, o = carry
+                p, o, m = step(p, o, batch)
+                return (p, o), m
+
+            (p, o), ms = jax.lax.scan(body, (wparams, wopt), wbatches)
+            return p, o, ms
+
+        # re-seed workers from the current consensus params
+        params_w = _broadcast(params, self.num_workers)
+        params_w, opt_w, ms = jax.vmap(worker_run)(
+            params_w, state["opt_w"], batches)
+        new_params = _worker_mean(params_w)
+        metrics = {"loss": jnp.mean(ms["loss"][:, -1])}
+        return new_params, {"params_w": params_w, "opt_w": opt_w}, metrics
+
+
+@dataclasses.dataclass
+class ElasticAveraging:
+    """EASGD: workers keep their own parameters between rounds and are
+    pulled toward a center variable; the center drifts toward the worker
+    mean.  ``alpha`` is the elastic coefficient (per sync)."""
+
+    optimizer: Optimizer
+    num_workers: int
+    alpha: float = 0.5
+    clip: float = 0.0
+
+    def init(self, params):
+        w = self.num_workers
+        params_w = _broadcast(params, w)
+        return {
+            "params_w": params_w,
+            "opt_w": jax.vmap(self.optimizer.init)(params_w),
+        }
+
+    def round(self, params, state, batches, loss_fn: LossFn):
+        step = _local_step(self.optimizer, loss_fn, self.clip)
+
+        def worker_run(wparams, wopt, wbatches):
+            def body(carry, batch):
+                p, o = carry
+                p, o, m = step(p, o, batch)
+                return (p, o), m
+
+            (p, o), ms = jax.lax.scan(body, (wparams, wopt), wbatches)
+            return p, o, ms
+
+        params_w, opt_w, ms = jax.vmap(worker_run)(
+            state["params_w"], state["opt_w"], batches)
+        a = self.alpha
+        center = params
+        diff = jax.tree.map(lambda pw, c: pw - c[None], params_w, center)
+        params_w = jax.tree.map(lambda pw, d: pw - a * d, params_w, diff)
+        center = jax.tree.map(
+            lambda c, d: c + a * jnp.mean(d, axis=0).astype(c.dtype),
+            center, diff)
+        metrics = {"loss": jnp.mean(ms["loss"][:, -1])}
+        return center, {"params_w": params_w, "opt_w": opt_w}, metrics
+
+
+STRATEGIES = {
+    "sync": SyncDataParallel,
+    "local_sgd": LocalSGD,
+    "elastic": ElasticAveraging,
+}
+
+
+def make_strategy(name: str, optimizer: Optimizer, num_workers: int,
+                  **kw) -> Any:
+    return STRATEGIES[name](optimizer=optimizer, num_workers=num_workers, **kw)

@@ -1,0 +1,96 @@
+"""Trainer: strategy-driven loop with checkpointing + metrics.
+
+Two frontends over the same substrate:
+
+  * ``Trainer``       — strategy-based (the paper's Spark/Elephas shape):
+                        W workers x K local steps per round, any model with
+                        a ``loss_fn(params, batch)``.
+  * ``make_train_step`` — the production pjit path for the LLM pool: one
+                        SPMD train step (grads + optimizer) to be jit'd
+                        with sharded params/batch by ``launch/train.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class Trainer:
+    strategy: Any
+    loss_fn: Callable
+    ckpt: Optional[CheckpointManager] = None
+    ckpt_every: int = 0
+    log_every: int = 10
+
+    def fit(self, params, batch_iter: Iterator, rounds: int,
+            log: Callable[[str], None] = print):
+        """``batch_iter`` yields (W, K, B, ...) pytrees per round."""
+        state = self.strategy.init(params)
+        round_fn = jax.jit(
+            lambda p, s, b: self.strategy.round(p, s, b, self.loss_fn))
+        history = []
+        t0 = time.time()
+        for r in range(rounds):
+            batches = next(batch_iter)
+            params, state, metrics = round_fn(params, state, batches)
+            history.append({k: float(v) for k, v in metrics.items()})
+            if self.log_every and (r % self.log_every == 0 or r == rounds - 1):
+                log(f"round {r:4d} " + " ".join(
+                    f"{k}={v:.4f}" for k, v in history[-1].items()) +
+                    f" ({time.time() - t0:.1f}s)")
+            if self.ckpt and self.ckpt_every and (r + 1) % self.ckpt_every == 0:
+                self.ckpt.save(r + 1, {"params": params})
+        return params, state, history
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    clip: float = 1.0):
+    """SPMD train step: (params, opt_state, batch) -> (params, opt_state,
+    metrics).  Grad averaging over the batch axes is implicit in the batch
+    sharding (XLA inserts the reduce-scatter/all-reduce)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if clip:
+            grads, gnorm = clip_by_global_norm(grads, clip)
+            metrics = {**metrics, "grad_norm": gnorm}
+        upd, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, upd)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def worker_batches(x: np.ndarray, y: np.ndarray, num_workers: int,
+                   steps_per_round: int, batch_size: int, seed: int,
+                   wrap: Callable = None) -> Iterator:
+    """Round iterator for strategy training: (W, K, B, ...) arrays drawn
+    without replacement per round (reshuffling every epoch) — the RDD-shard
+    semantics of the paper's Spark pipeline."""
+    n = x.shape[0]
+    per_round = num_workers * steps_per_round * batch_size
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    pos = 0
+    while True:
+        if pos + per_round > n:
+            order = rng.permutation(n)
+            pos = 0
+        idx = order[pos : pos + per_round]
+        pos += per_round
+        xb = x[idx].reshape(num_workers, steps_per_round, batch_size,
+                            *x.shape[1:])
+        yb = y[idx].reshape(num_workers, steps_per_round, batch_size,
+                            *y.shape[1:])
+        batch = {"x": jnp.asarray(xb), "y": jnp.asarray(yb)}
+        yield wrap(batch) if wrap else batch

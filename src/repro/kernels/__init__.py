@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU)."""

@@ -1,0 +1,144 @@
+"""Blockwise online-softmax attention (FlashAttention) as a Pallas TPU
+kernel.
+
+TPU adaptation (vs the CUDA original): the grid's minor axis is executed
+sequentially on a core, so the running max / denominator / accumulator
+live in VMEM scratch that persists across the k-block axis — no atomics,
+no shared-memory tiling.  Block shapes are (block_q, head_dim) and
+(block_k, head_dim) with head_dim lane-aligned (64/128/256) and block_q /
+block_k multiples of the 8-sublane MXU tile.
+
+Supports causal and sliding-window masking and GQA (q heads grouped over
+kv heads via the BlockSpec index maps — kv blocks are streamed once per
+q-head group, never materialized repeated).
+
+Layout: q (B, H, Sq, hd), k/v (B, KV, Sk, hd) -> out (B, H, Sq, hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_q: int, block_k: int, nk: int,
+            causal: bool, window: int, sk_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Static-shape mask work happens only when the block could be partial.
+    def compute():
+        q = q_ref[...].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[...].astype(jnp.float32)              # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < sk_valid
+        if causal:
+            mask = mask & (qpos >= kpos)
+        if window:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[...].astype(jnp.float32)               # (bk, hd)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal or window:
+        # Skip blocks that are entirely masked out.
+        relevant = True
+        if causal:
+            relevant = k_start <= q_start + block_q - 1
+        if window:
+            relevant = relevant & (k_start + block_k - 1 > q_start - window)
+        pl.when(relevant)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd).  Sq/Sk need not be
+    multiples of the block sizes (padded here; PAD keys are masked via the
+    causal/positional mask when causal, and by key-validity masking via
+    NEG_INF scores when not)."""
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(8, sk))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded keys sit at positions >= sk and are masked in-kernel via
+        # the ``sk_valid`` bound.
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    sq_p, sk_p = sq + pq, sk + pk
+    nq, nk = sq_p // block_q, sk_p // block_k
+
+    grid = (b, h, nq, nk)
+    kern = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k, nk=nk,
+        causal=causal, window=window, sk_valid=sk)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

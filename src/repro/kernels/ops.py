@@ -1,0 +1,69 @@
+"""Public kernel entry points.
+
+Each op dispatches: Pallas kernel on TPU, Pallas-interpret when
+``REPRO_FORCE_PALLAS_INTERPRET=1`` (kernel-path testing on CPU), else the
+pure-jnp reference.  The reference IS the semantics; tests assert the
+kernel path matches it over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import conv2d as _conv
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rwkv6_scan as _rwkv
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+
+
+def _use_kernel() -> bool:
+    return _platform() == "tpu" or _force_interpret()
+
+
+def kernels_enabled() -> bool:
+    """Should the MODEL forward path route through the Pallas kernels?
+    True on TPU, or when REPRO_USE_KERNELS=1 (CPU: interpret mode —
+    kernel-path integration testing)."""
+    return _platform() == "tpu" or \
+        os.environ.get("REPRO_USE_KERNELS", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def _fa_ref_jit(q, k, v, causal, window):
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    if _use_kernel():
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=_platform() != "tpu")
+    return _fa_ref_jit(q, k, v, causal, window)
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 32):
+    """Chunked WKV6; returns (out, final_state)."""
+    if _use_kernel():
+        return _rwkv.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk,
+                                interpret=_platform() != "tpu")
+    return _ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+
+
+def conv2d(x, w, *, block_b: int = 128):
+    """Valid NHWC conv, stride 1."""
+    if _use_kernel():
+        return _conv.conv2d(x, w, block_b=block_b,
+                            interpret=_platform() != "tpu")
+    return _ref.conv2d_ref(x, w)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the semantics; the kernels must match them (asserted over
+shape/dtype sweeps in tests/test_kernels.py with ``interpret=True``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd).  GQA: H % KV == 0.
+
+    Plain softmax attention in fp32 with optional causal and sliding-window
+    (``window`` > 0: query i attends keys (i-window, i]) masking.
+    """
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, hd).astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, k32) / math.sqrt(hd)
+    sk = k.shape[2]
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (qi >= ki)
+    if window:
+        mask = mask & (qi - ki < window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v32)
+    return out.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """WKV6 recurrence.  r/k/v (B,H,S,hd), w (B,H,S,hd) decay in (0,1),
+    u (H,hd) bonus.  Returns (out (B,H,S,hd), s_final (B,H,hd,hd)).
+
+        o_t[j] = sum_i r_t[i] * (S[i,j] + u[i] k_t[i] v_t[j])
+        S      = diag(w_t) S + k_t (x) v_t
+    """
+    b, h, s, hd = r.shape
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u32[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r32, k32, v32, w32))
+    s_final, os_ = jax.lax.scan(step, s0, xs)
+    out = os_.transpose(1, 2, 0, 3)
+    return out.astype(r.dtype), s_final
+
+
+def conv2d_ref(x, w):
+    """NHWC x HWIO valid conv, stride 1 (the paper's CNN hot-spot)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,470 @@
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input
+shape x mesh), extract memory analysis + roofline terms.
+
+The XLA_FLAGS line below MUST run before ANY other import (jax locks the
+device count on first init) — keep it the very first statement.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--variant tp]
+    python -m repro.launch.dryrun --all --cost        # + roofline assembly
+
+Results are cached as JSON under results/dryrun/ (one file per combo) so
+the EXPERIMENTS.md tables can be regenerated without recompiling.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+from repro.core.trainer import make_train_step
+from repro.launch.mesh import make_production_mesh
+from repro.models import attention as attn_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf
+from repro.models.api import Model
+from repro.models.layers import softmax_xent
+from repro.models.module import abstract_params, param_pspecs
+from repro.models.sharding import Rules, make_rules, use_rules
+from repro.optim import adamw
+from repro.roofline.analysis import (collective_bytes, model_flops,
+                                     roofline_terms)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# long_500k needs sub-quadratic decode state; whisper's decoder is
+# 448-position enc-dec (see DESIGN.md §Arch-applicability / Shape-skips).
+LONG_OK = {"rwkv6-1.6b", "jamba-1.5-large-398b", "gemma3-4b"}
+
+
+def combos(multi_pod: bool):
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            yield arch, shape
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree)
+
+
+def _batch_pspecs(mesh, batch_abs, rules: Rules):
+    """Batch sharded over (pod, data) — shape-filtered, so a global batch
+    of 1 (long_500k) falls back to replicated instead of tripping pjit's
+    divisibility check."""
+    return {k: rules.spec(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+            for k, v in batch_abs.items() if k != "caches"}
+
+
+def _opt_abstract(params_abs):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"count": jax.ShapeDtypeStruct((), jnp.int32),
+            "mu": jax.tree.map(f32, params_abs),
+            "nu": jax.tree.map(f32, params_abs)}
+
+
+def _opt_pspecs(pspecs):
+    return {"count": P(), "mu": pspecs, "nu": pspecs}
+
+
+def _mem(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_total_gib": ma.temp_size_in_bytes / 2**30,
+        "peak_gib": ma.peak_memory_in_bytes / 2**30,
+    }
+
+
+def _cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+# ---------------------------------------------------------------- lowering
+
+
+def lower_step(model: Model, shape: InputShape, mesh, variant: str):
+    """Build + lower + compile the full step for one combo.  Returns
+    (compiled, seconds)."""
+    cfg = model.cfg
+    rules = make_rules(mesh, shape.mode, variant)
+    pspecs = model.param_pspecs(rules)
+    params_abs = model.abstract_params()
+    specs = model.input_specs(shape)
+    t0 = time.time()
+
+    with mesh:
+        if shape.mode == "train":
+            opt = adamw(1e-4)
+            opt_abs = _opt_abstract(params_abs)
+            step = make_train_step(lambda p, b: model.loss(p, b), opt)
+
+            def wrapped(params, opt_state, batch):
+                with use_rules(rules):
+                    return step(params, opt_state, batch)
+
+            lowered = jax.jit(
+                wrapped,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, _opt_pspecs(pspecs)),
+                              _ns(mesh, _batch_pspecs(mesh, specs, rules))),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, specs)
+        elif shape.mode == "prefill":
+            def wrapped(params, batch):
+                with use_rules(rules):
+                    return model.prefill(params, batch,
+                                         cache_max=shape.seq_len)
+
+            lowered = jax.jit(
+                wrapped,
+                in_shardings=(_ns(mesh, pspecs),
+                              _ns(mesh, _batch_pspecs(mesh, specs, rules))),
+            ).lower(params_abs, specs)
+        else:  # decode
+            cache_ps = model.cache_pspecs(rules, shape.global_batch,
+                                          shape.seq_len)
+            b = shape.global_batch
+
+            def wrapped(params, caches, tokens, pos):
+                with use_rules(rules):
+                    return model.decode_step(params, caches, tokens, pos)
+
+            lowered = jax.jit(
+                wrapped,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, cache_ps),
+                              NamedSharding(mesh, rules.spec(("batch", None),
+                                                             (b, 1))),
+                              NamedSharding(mesh, rules.spec(("batch",),
+                                                             (b,)))),
+                donate_argnums=(1,),
+            ).lower(params_abs, specs["caches"], specs["tokens"],
+                    specs["pos"])
+        compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+# ------------------------------------------------------- compositional cost
+
+
+def _layer_cost(model: Model, shape: InputShape, mesh, variant: str,
+                sig: Tuple[str, bool]) -> Dict[str, float]:
+    """Lower ONE layer of signature ``sig`` under the same rules and return
+    its per-device cost (q-chunk scan disabled so attention FLOPs are fully
+    counted; recurrent cores add their analytic scan cost)."""
+    cfg = model.cfg
+    kind, moe = sig
+    mode = shape.mode
+    rules = make_rules(mesh, mode, variant)
+    schema = tf.block_schema(cfg, kind, moe)
+    p_abs = abstract_params(schema, cfg.dtype)
+    p_ps = param_pspecs(schema, rules)
+    b = shape.global_batch
+    s = shape.seq_len if mode != "decode" else 1
+    x_abs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    x_ps = rules.spec(("batch", None, None), (b, s, cfg.d_model))
+    pos_abs = jax.ShapeDtypeStruct((b,), jnp.int32) if mode == "decode" else \
+        jax.ShapeDtypeStruct((s,), jnp.int32)
+
+    tok = attn_mod._Q_CHUNK_OVERRIDE.set(max(s, 1))
+    try:
+        with mesh:
+            if mode == "train":
+                def f(p, x, positions):
+                    with use_rules(rules):
+                        def inner(p, x):
+                            y, aux = tf.block_apply(p, cfg, x, positions,
+                                                    kind=kind, moe=moe)
+                            return jnp.sum(y.astype(jnp.float32)) + aux
+                        return jax.grad(inner, argnums=(0, 1))(p, x)
+
+                compiled = jax.jit(f, in_shardings=(
+                    _ns(mesh, p_ps), NamedSharding(mesh, x_ps), None)
+                ).lower(p_abs, x_abs, pos_abs).compile()
+            elif mode == "prefill":
+                def f(p, x, positions):
+                    with use_rules(rules):
+                        return tf.block_prefill(p, cfg, x, positions,
+                                                kind=kind, moe=moe,
+                                                cache_max=shape.seq_len)
+
+                compiled = jax.jit(f, in_shardings=(
+                    _ns(mesh, p_ps), NamedSharding(mesh, x_ps), None)
+                ).lower(p_abs, x_abs, pos_abs).compile()
+            else:
+                cache_abs = tf.block_cache_abstract(cfg, kind, b,
+                                                    shape.seq_len, cfg.dtype)
+                logical = tf.block_cache_logical(cfg, kind)
+                cache_ps = {kk: rules.spec(logical[kk], cache_abs[kk].shape)
+                            for kk in cache_abs}
+
+                def f(p, x, cache, pos):
+                    with use_rules(rules):
+                        return tf.block_decode(p, cfg, x, cache, pos,
+                                               kind=kind, moe=moe)
+
+                compiled = jax.jit(f, in_shardings=(
+                    _ns(mesh, p_ps), NamedSharding(mesh, x_ps),
+                    _ns(mesh, cache_ps),
+                    NamedSharding(mesh, rules.spec(("batch",), (b,))))
+                ).lower(p_abs, x_abs, cache_abs, pos_abs).compile()
+    finally:
+        attn_mod._Q_CHUNK_OVERRIDE.reset(tok)
+
+    cost = _cost(compiled)
+    wb, kinds = collective_bytes(compiled.as_text())
+    n_dev = mesh.devices.size
+    # analytic recurrence cost (cost_analysis sees the scan body once)
+    if kind == "mamba":
+        fl, by = ssm_mod.recurrence_cost(cfg, b, s)
+        cost["flops"] += (3.0 if mode == "train" else 1.0) * fl / n_dev
+        cost["bytes"] += (3.0 if mode == "train" else 1.0) * by / n_dev
+    elif kind == "rwkv6":
+        fl, by = rwkv_mod.recurrence_cost(cfg, b, s)
+        cost["flops"] += (3.0 if mode == "train" else 1.0) * fl / n_dev
+        cost["bytes"] += (3.0 if mode == "train" else 1.0) * by / n_dev
+    return {"flops": cost["flops"], "bytes": cost["bytes"],
+            "coll_weighted": wb, "coll_by_kind": kinds}
+
+
+def _head_cost(model: Model, shape: InputShape, mesh, variant: str
+               ) -> Dict[str, float]:
+    """Embed -> unembed -> loss (train: + grads).  Decode: single token."""
+    cfg = model.cfg
+    mode = shape.mode
+    rules = make_rules(mesh, mode, variant)
+    from repro.models.layers import embed_schema
+    schema = embed_schema(cfg)
+    p_abs = abstract_params(schema, cfg.dtype)
+    p_ps = param_pspecs(schema, rules)
+    b = shape.global_batch
+    s = shape.seq_len if mode != "decode" else 1
+    tok_abs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    lbl_abs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_ps = NamedSharding(mesh, rules.spec(("batch", None), (b, s)))
+
+    from repro.models.layers import embed_apply, unembed_apply
+
+    def positions_for(toks):
+        if cfg.pos_kind != "learned":
+            return None
+        pos = jnp.arange(toks.shape[1], dtype=jnp.int32)
+        return jnp.minimum(pos, cfg.max_position - 1)[None]
+
+    with mesh:
+        if mode == "train":
+            def f(p, toks, labels):
+                with use_rules(rules):
+                    def inner(p):
+                        x = embed_apply(p, cfg, toks, positions_for(toks))
+                        logits = unembed_apply(p, cfg, x)
+                        return softmax_xent(logits, labels)
+                    return jax.grad(inner)(p)
+
+            compiled = jax.jit(f, in_shardings=(_ns(mesh, p_ps), tok_ps,
+                                                tok_ps)
+                               ).lower(p_abs, tok_abs, lbl_abs).compile()
+        else:
+            def f(p, toks):
+                with use_rules(rules):
+                    x = embed_apply(p, cfg, toks, positions_for(toks))
+                    return unembed_apply(p, cfg, x)
+
+            compiled = jax.jit(f, in_shardings=(_ns(mesh, p_ps), tok_ps)
+                               ).lower(p_abs, tok_abs).compile()
+    cost = _cost(compiled)
+    wb, kinds = collective_bytes(compiled.as_text())
+    return {"flops": cost["flops"], "bytes": cost["bytes"],
+            "coll_weighted": wb, "coll_by_kind": kinds}
+
+
+def _optimizer_cost(model: Model, mesh, variant: str) -> Dict[str, float]:
+    """The adamw update over the full parameter tree (elementwise; real
+    HLO so ZeRO-style sharding shows up in bytes)."""
+    rules = make_rules(mesh, "train", variant)
+    pspecs = model.param_pspecs(rules)
+    params_abs = model.abstract_params()
+    opt = adamw(1e-4)
+    opt_abs = _opt_abstract(params_abs)
+
+    def f(params, opt_state, grads):
+        upd, new_state = opt.update(grads, opt_state, params)
+        from repro.optim import apply_updates
+        return apply_updates(params, upd), new_state
+
+    with mesh:
+        compiled = jax.jit(f, in_shardings=(
+            _ns(mesh, pspecs), _ns(mesh, _opt_pspecs(pspecs)),
+            _ns(mesh, pspecs)), donate_argnums=(0, 1),
+        ).lower(params_abs, opt_abs, params_abs).compile()
+    cost = _cost(compiled)
+    wb, kinds = collective_bytes(compiled.as_text())
+    return {"flops": cost["flops"], "bytes": cost["bytes"],
+            "coll_weighted": wb, "coll_by_kind": kinds}
+
+
+def assemble_cost(model: Model, shape: InputShape, mesh, variant: str
+                  ) -> Dict[str, Any]:
+    """Compositional per-device totals (see roofline/analysis.py)."""
+    cfg = model.cfg
+    sigs = model.layer_signatures()
+    total = {"flops": 0.0, "bytes": 0.0, "coll_weighted": 0.0}
+    kinds_total: Dict[str, float] = {}
+    parts = {}
+    for sig, count in sigs.items():
+        c = _layer_cost(model, shape, mesh, variant, sig)
+        parts[f"layer_{sig[0]}{'_moe' if sig[1] else ''}"] = {
+            **c, "count": count}
+        for k in total:
+            total[k] += count * c[k]
+        for k, v in c["coll_by_kind"].items():
+            kinds_total[k] = kinds_total.get(k, 0.0) + count * v
+    head = _head_cost(model, shape, mesh, variant)
+    parts["head"] = head
+    for k in total:
+        total[k] += head[k]
+    for k, v in head["coll_by_kind"].items():
+        kinds_total[k] = kinds_total.get(k, 0.0) + v
+    if shape.mode == "train":
+        optc = _optimizer_cost(model, mesh, variant)
+        parts["optimizer"] = optc
+        for k in total:
+            total[k] += optc[k]
+        for k, v in optc["coll_by_kind"].items():
+            kinds_total[k] = kinds_total.get(k, 0.0) + v
+
+    rr = roofline_terms(total["flops"], total["bytes"], "")
+    rr.coll_bytes_weighted = total["coll_weighted"]
+    rr.coll_by_kind = kinds_total
+    mf = model_flops(cfg, shape)
+    n_dev = mesh.devices.size
+    return {
+        "per_device": total,
+        "terms": rr.terms(),
+        "parts": {k: {kk: vv for kk, vv in v.items() if kk != "coll_by_kind"}
+                  for k, v in parts.items()},
+        "coll_by_kind": kinds_total,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_ratio": (mf / n_dev) / max(total["flops"], 1.0),
+    }
+
+
+# ---------------------------------------------------------------- runner
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              variant: str = "tp", with_cost: bool = False,
+              kv_quant: bool = False, out_dir: Optional[str] = None,
+              verbose: bool = True) -> Dict[str, Any]:
+    import dataclasses
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_cache_quant=True)
+        variant_name = variant + "+kvq"
+    else:
+        variant_name = variant
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    mesh_name = "pod2x16x16" if multi_pod else "16x16"
+
+    compiled, secs = lower_step(model, shape, mesh, variant)
+    mem = _mem(compiled)
+    cost = _cost(compiled)
+    wb, kinds = collective_bytes(compiled.as_text())
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant_name, "compile_seconds": round(secs, 1),
+        "memory": mem,
+        "full_compile_cost": {**cost, "coll_weighted": wb,
+                              "coll_by_kind": kinds,
+                              "note": "scan bodies counted once"},
+    }
+    if with_cost:
+        result["assembled"] = assemble_cost(model, shape, mesh, variant)
+    if verbose:
+        peak = mem["peak_gib"]
+        line = (f"{arch:22s} {shape_name:12s} {mesh_name:10s} {variant_name:6s} "
+                f"compile={secs:5.1f}s peak={peak:7.2f}GiB")
+        if with_cost:
+            t = result["assembled"]["terms"]
+            line += (f" compute={t['compute_s']*1e3:8.2f}ms "
+                     f"memory={t['memory_s']*1e3:8.2f}ms "
+                     f"coll={t['collective_s']*1e3:8.2f}ms "
+                     f"dom={t['dominant']}")
+        print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}__{variant_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1, default=float)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="tp",
+                    choices=["dp", "tp", "fsdp", "sp"])
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (decode shapes)")
+    ap.add_argument("--cost", action="store_true",
+                    help="assemble compositional roofline terms")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = list(combos(args.multi_pod))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "16x16"
+    failures = []
+    for arch, shape in todo:
+        fname = os.path.join(args.out,
+                             f"{arch}__{shape}__{mesh_name}__{args.variant}.json")
+        if args.skip_existing and os.path.exists(fname):
+            print(f"skip {arch} {shape} (cached)", flush=True)
+            continue
+        try:
+            run_combo(arch, shape, multi_pod=args.multi_pod,
+                      variant=args.variant, with_cost=args.cost,
+                      kv_quant=args.kv_quant, out_dir=args.out)
+        except Exception as e:  # noqa: BLE001 — report every combo
+            import traceback
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} {shape}: {e!r}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures")
+        raise SystemExit(1)
+    print("\nall combos lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device; only
+``launch/dryrun.py`` forces the 512-device host platform).
+
+Target: TPU v5e.  Single pod = (data=16, model=16) = 256 chips; multi-pod
+= (pod=2, data=16, model=16) = 512 chips, with the slow inter-pod (DCI)
+axis outermost so XLA keeps pod-crossing collectives to the gradient
+reduction only.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+ICI_LINKS = 4                  # v5e: 4 ICI links per chip (2D torus x2)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever-fits mesh for CPU tests/examples (1 device -> (1, 1))."""
+    n = len(jax.devices())
+    dp = max(n // model_parallel, 1)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))

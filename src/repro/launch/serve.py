@@ -1,0 +1,66 @@
+"""Serving launcher: continuous-batching LLM inference on any assigned
+architecture (reduced variants on the CPU container).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b \
+        --requests 8 --slots 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.api import Model
+from repro.serving.server import LLMEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-max", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.frontend != "none" or cfg.is_encoder_decoder:
+        raise SystemExit(f"{cfg.name}: serve CLI drives text-only decode; "
+                         "use examples/serve_digits.py for the full app")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = LLMEngine(model, params, num_slots=args.slots,
+                       cache_max=args.cache_max)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              size=(args.prompt_len,)).astype(np.int32)
+        engine.submit(prompt, max_new=args.max_new, now=time.time() - t0)
+
+    finished = []
+    steps = 0
+    while not engine.idle:
+        finished.extend(engine.step(now=time.time() - t0))
+        steps += 1
+    dt = time.time() - t0
+    total_new = sum(len(r.out_tokens) for r in finished)
+    print(f"{len(finished)} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s, {steps} engine steps, "
+          f"slots={args.slots})")
+    for r in finished[:3]:
+        print(f"  req {r.rid}: {len(r.out_tokens)} tokens "
+              f"{r.out_tokens[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

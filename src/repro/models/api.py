@@ -1,0 +1,228 @@
+"""Unified model API.
+
+``Model(cfg)`` wraps any assigned architecture behind one interface:
+
+    schema()                       parameter ParamSpec pytree
+    init(key)                      concrete parameters
+    abstract_params()              ShapeDtypeStructs (dry-run)
+    param_pspecs(rules)            PartitionSpec pytree
+    loss(params, batch)            scalar + metrics        (train_step core)
+    forward(params, batch)         logits
+    prefill(params, batch)         (last_logits, caches)
+    decode_step(params, caches, tokens, pos)  (logits, caches)
+    input_specs(shape)             abstract batch for lower()
+    cache_abstract(batch, maxlen)  abstract decode cache
+    cache_pspecs(rules)            cache PartitionSpecs
+
+Batch dict keys: "tokens" (B,S) int32, "labels" (B,S) int32 (train),
+"embeds" (B,N,W) for audio/vlm frontends.  For VLM the projected patch
+embeddings are *prefixed* to the token embeddings (prefix-LM attention);
+for whisper "embeds" is the encoder input.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import frontend as fe
+from repro.models import transformer as tf
+from repro.models.layers import (embed_apply, embed_schema, norm_apply,
+                                 norm_schema, softmax_xent, unembed_apply)
+from repro.models.module import (abstract_params, init_params, param_pspecs,
+                                 ParamSpec)
+from repro.models.sharding import Rules, shard
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ schema
+    def schema(self):
+        cfg = self.cfg
+        s: Dict[str, Any] = {"embed": embed_schema(cfg)}
+        s.update(fe.frontend_schema(cfg))
+        if cfg.is_encoder_decoder:
+            s["encdec"] = tf.encdec_schema(cfg)
+        else:
+            s["stack"] = tf.stack_schema(cfg)
+        s["final_norm"] = norm_schema(cfg)
+        return s
+
+    def init(self, key, dtype: Optional[str] = None):
+        return init_params(self.schema(), key, dtype or self.cfg.dtype)
+
+    def abstract_params(self, dtype: Optional[str] = None):
+        return abstract_params(self.schema(), dtype or self.cfg.dtype)
+
+    def param_pspecs(self, rules: Rules):
+        return param_pspecs(self.schema(), rules)
+
+    # ------------------------------------------------------------ helpers
+    def _positions(self, s: int):
+        pos = jnp.arange(s, dtype=jnp.int32)
+        return jnp.minimum(pos, self.cfg.max_position - 1) if (
+            self.cfg.pos_kind == "learned") else pos
+
+    def _embed_tokens(self, params, tokens, positions):
+        return embed_apply(params["embed"], self.cfg, tokens, positions)
+
+    def _inputs(self, params, batch):
+        """-> (x (B,S,D), positions (S,), prefix_len)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision":
+            pre = fe.project(params, cfg, batch["embeds"])
+            s_total = pre.shape[1] + tokens.shape[1]
+            positions = self._positions(s_total)
+            tok_x = self._embed_tokens(params, tokens,
+                                       positions[pre.shape[1]:][None])
+            x = jnp.concatenate([pre.astype(tok_x.dtype), tok_x], axis=1)
+            return shard(x, "batch", "seq", "d_model"), positions, pre.shape[1]
+        positions = self._positions(tokens.shape[1])
+        x = self._embed_tokens(params, tokens, positions[None])
+        return x, positions, 0
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, batch, *, remat: bool = True):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc = tf.encoder_apply(params["encdec"], cfg,
+                                   batch["embeds"].astype(jnp.dtype(cfg.dtype)))
+            positions = self._positions(batch["tokens"].shape[1])
+            x = self._embed_tokens(params, batch["tokens"], positions[None])
+            x = tf.decoder_apply(params["encdec"]["decoder"], cfg, x,
+                                 positions, enc)
+            aux = jnp.float32(0.0)
+        else:
+            x, positions, prefix = self._inputs(params, batch)
+            x, aux = tf.stack_apply(params["stack"], cfg, x, positions,
+                                    bidir_prefix=prefix, remat=remat)
+            if prefix:
+                x = x[:, prefix:]
+        x = norm_apply(params["final_norm"], x, cfg.norm_kind)
+        logits = unembed_apply(params["embed"], cfg, x)
+        return logits, aux
+
+    def loss(self, params, batch, *, remat: bool = True):
+        logits, aux = self.forward(params, batch, remat=remat)
+        xent = softmax_xent(logits, batch["labels"], batch.get("mask"))
+        total = xent + self.cfg.router_aux_coef * aux
+        return total, {"loss": total, "xent": xent, "aux": aux}
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params, batch, *, cache_max: int):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc = tf.encoder_apply(params["encdec"], cfg,
+                                   batch["embeds"].astype(jnp.dtype(cfg.dtype)))
+            positions = self._positions(batch["tokens"].shape[1])
+            x = self._embed_tokens(params, batch["tokens"], positions[None])
+            x, caches = tf.decoder_prefill(params["encdec"]["decoder"], cfg, x,
+                                           positions, enc, cache_max)
+        else:
+            x, positions, prefix = self._inputs(params, batch)
+            x, _, caches = tf.stack_prefill(params["stack"], cfg, x, positions,
+                                            cache_max=cache_max,
+                                            bidir_prefix=prefix)
+        x = norm_apply(params["final_norm"], x, cfg.norm_kind)
+        logits = unembed_apply(params["embed"], cfg, x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens (B,1) int32, pos (B,) absolute position.  -> (logits, caches)."""
+        cfg = self.cfg
+        posc = jnp.minimum(pos, cfg.max_position - 1) if (
+            cfg.pos_kind == "learned") else pos
+        x = self._embed_tokens(params, tokens, posc[:, None])
+        if cfg.is_encoder_decoder:
+            x, caches = tf.decoder_decode(params["encdec"]["decoder"], cfg, x,
+                                          caches, posc)
+        else:
+            x, caches = tf.stack_decode(params["stack"], cfg, x, caches, posc)
+        x = norm_apply(params["final_norm"], x, cfg.norm_kind)
+        logits = unembed_apply(params["embed"], cfg, x)
+        return logits, caches
+
+    # ------------------------------------------------------------ abstract
+    def input_specs(self, shape: InputShape, dtype: Optional[str] = None
+                    ) -> Dict[str, Any]:
+        """Abstract batch for ``jax.jit(...).lower()`` — no allocation."""
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        b = shape.global_batch
+        n_front = fe.frontend_tokens(cfg)
+        if shape.mode == "decode":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "caches": self.cache_abstract(b, shape.seq_len),
+            }
+            return specs
+        s = shape.seq_len - (n_front if cfg.frontend == "vision" else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if n_front:
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, n_front, fe.embed_dim(cfg)), dt)
+        return specs
+
+    def cache_abstract(self, batch: int, cache_max: int,
+                       dtype: Optional[str] = None):
+        cfg = self.cfg
+        dt = dtype or cfg.dtype
+        if cfg.is_encoder_decoder:
+            hd = cfg.resolved_head_dim
+            out = {}
+            for i in range(cfg.num_layers):
+                out[f"layer{i}"] = {
+                    "self": tf.block_cache_abstract(cfg, "attn", batch,
+                                                    cache_max, dt),
+                    "xk": jax.ShapeDtypeStruct(
+                        (batch, cfg.encoder_frames, cfg.num_kv_heads, hd),
+                        jnp.dtype(dt)),
+                    "xv": jax.ShapeDtypeStruct(
+                        (batch, cfg.encoder_frames, cfg.num_kv_heads, hd),
+                        jnp.dtype(dt)),
+                }
+            return out
+        return tf.stack_cache_abstract(cfg, batch, cache_max, dt)
+
+    def cache_logical(self):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            cross = ("batch", "frames", "kv_heads", "head_dim")
+            out = {}
+            for i in range(cfg.num_layers):
+                out[f"layer{i}"] = {
+                    "self": tf.block_cache_logical(cfg, "attn"),
+                    "xk": cross,
+                    "xv": cross,
+                }
+            return out
+        return tf.stack_cache_logical(cfg)
+
+    def cache_pspecs(self, rules: Rules, batch: int, cache_max: int):
+        logical = self.cache_logical()
+        abstract = self.cache_abstract(batch, cache_max)
+
+        def is_logical(x):
+            return isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)
+
+        return jax.tree.map(
+            lambda lg, ab: rules.spec(lg, ab.shape), logical, abstract,
+            is_leaf=is_logical)
+
+    # ------------------------------------------------------------ info
+    def layer_signatures(self):
+        return tf.signatures(self.cfg)
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,68 @@
+"""The paper's model (Sec. II-C): Keras-default MNIST CNN in pure JAX.
+
+Conv2D(32, 3x3, relu) -> MaxPool(2) -> Flatten -> Dense(128, relu) ->
+Dense(10).  Batch 64, 10 epochs in the paper; trained data-parallel over 5
+Spark workers there, over the ``data`` mesh axis (or the vmapped-worker
+strategies in ``repro.core.strategies``) here.
+
+The conv hot-spot has a Pallas TPU kernel (``repro.kernels.conv2d``); this
+module's ``conv2d`` dispatches to it when requested, else uses the jnp
+reference path (identical math — asserted in tests).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mnist_cnn import CNNConfig
+from repro.models.module import ParamSpec
+
+
+def cnn_schema(cfg: CNNConfig):
+    k, cin, cout = cfg.conv_kernel, cfg.in_channels, cfg.conv_channels
+    side = (cfg.image_size - cfg.conv_kernel + 1) // cfg.pool
+    flat = side * side * cout
+    return {
+        "conv_w": ParamSpec((k, k, cin, cout), (None, None, None, None), scale_dim=-2),
+        "conv_b": ParamSpec((cout,), (None,), init="zeros"),
+        "dense1_w": ParamSpec((flat, cfg.hidden), (None, None), scale_dim=-2),
+        "dense1_b": ParamSpec((cfg.hidden,), (None,), init="zeros"),
+        "dense2_w": ParamSpec((cfg.hidden, cfg.num_classes), (None, None), scale_dim=-2),
+        "dense2_b": ParamSpec((cfg.num_classes,), (None,), init="zeros"),
+    }
+
+
+def conv2d_valid(x, w, *, use_kernel: bool = False):
+    """NHWC valid conv.  ``use_kernel`` selects the Pallas TPU kernel."""
+    if use_kernel:
+        from repro.kernels import ops
+
+        return ops.conv2d(x, w)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def cnn_forward(params: Dict, cfg: CNNConfig, images, *, use_kernel: bool = False):
+    """images (B, 28, 28, 1) in [0,1] -> logits (B, 10)."""
+    x = conv2d_valid(images, params["conv_w"], use_kernel=use_kernel)
+    x = jax.nn.relu(x + params["conv_b"])
+    b, h, w, c = x.shape
+    p = cfg.pool
+    x = x[:, : h - h % p, : w - w % p, :]
+    x = x.reshape(b, h // p, p, w // p, p, c).max(axis=(2, 4))
+    x = x.reshape(b, -1)
+    x = jax.nn.relu(x @ params["dense1_w"] + params["dense1_b"])
+    return x @ params["dense2_w"] + params["dense2_b"]
+
+
+def cnn_loss(params, cfg: CNNConfig, images, labels, *, use_kernel: bool = False):
+    logits = cnn_forward(params, cfg, images, use_kernel=use_kernel)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,101 @@
+"""Parameter-schema machinery.
+
+A model family declares its parameters once as a pytree of ``ParamSpec``
+(shape + logical axes + initializer).  From that single declaration we
+derive: real initialization (smoke tests / training), abstract
+ShapeDtypeStructs (dry-run), and PartitionSpec trees (pjit shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled | embed
+    scale_dim: int = -1           # fan-in axis for "scaled"
+    dtype: Optional[str] = None   # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(schema, key, dtype: str):
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = jnp.dtype(spec.dtype or dtype)
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dt)
+        elif spec.init == "embed":
+            v = jax.random.normal(k, spec.shape, jnp.float32) * 0.02
+            v = v.astype(dt)
+        else:  # "normal"/"scaled": fan-in-scaled gaussian; scale_dim is the
+            # (negative) fan-in axis, so layer-stacking preserves it.
+            fan_in = spec.shape[spec.scale_dim] if spec.shape else 1
+            v = jax.random.normal(k, spec.shape, jnp.float32) / np.sqrt(max(fan_in, 1))
+            v = v.astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema, dtype: str):
+    def f(spec: ParamSpec):
+        return jax.ShapeDtypeStruct(spec.shape, jnp.dtype(spec.dtype or dtype))
+
+    return jax.tree.map(f, schema, is_leaf=_is_spec)
+
+
+def param_pspecs(schema, rules: Rules):
+    def f(spec: ParamSpec):
+        return rules.spec(spec.logical, spec.shape)
+
+    return jax.tree.map(f, schema, is_leaf=_is_spec)
+
+
+def param_shardings(schema, rules: Rules, mesh):
+    from jax.sharding import NamedSharding
+
+    def f(spec: ParamSpec):
+        return NamedSharding(mesh, rules.spec(spec.logical, spec.shape))
+
+    return jax.tree.map(f, schema, is_leaf=_is_spec)
+
+
+def count_params(schema) -> int:
+    total = 0
+    for spec in jax.tree.leaves(schema, is_leaf=_is_spec):
+        total += int(np.prod(spec.shape)) if spec.shape else 1
+    return total
+
+
+def stack_specs(spec_tree, n: int):
+    """Add a leading stacked-layers axis to every ParamSpec in a tree."""
+
+    def f(s: ParamSpec):
+        assert s.scale_dim < 0, "use negative scale_dim so stacking preserves it"
+        return ParamSpec(
+            shape=(n,) + s.shape,
+            logical=("layers",) + s.logical,
+            init=s.init,
+            scale_dim=s.scale_dim,
+            dtype=s.dtype,
+        )
+
+    return jax.tree.map(f, spec_tree, is_leaf=_is_spec)

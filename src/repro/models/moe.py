@@ -1,0 +1,121 @@
+"""Mixture-of-Experts MLP: top-k router + capacity-slot gather dispatch.
+
+Design (TPU-native adaptation, see DESIGN.md):
+
+  * router runs in fp32; auxiliary load-balance loss (Switch-style) is
+    returned alongside the output and summed into the training loss.
+  * dispatch is *per batch row*: each row's S tokens are routed into
+    (num_experts, capacity) slots via a one-hot-cumsum position-in-expert
+    computation, then gathered — so the big GShard dispatch one-hot
+    ``(tokens, E, C)`` tensor is never materialized at global scale and
+    the expert compute is capacity-bounded (``capacity_factor`` × ideal).
+  * expert weights are sharded over the ``model`` mesh axis ("experts"
+    logical axis); tokens are batch-sharded — XLA SPMD inserts the
+    all-to-all at the gather/combine boundary.
+
+Overflowed tokens (beyond capacity) are dropped by the MoE branch (their
+combine weight is 0), exactly like Switch/GShard with capacity_factor.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamSpec
+from repro.models.sharding import shard
+
+
+def moe_schema(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    s = {
+        "router": ParamSpec((d, e), ("d_model", "experts"), scale_dim=-2,
+                            dtype="float32"),
+        "up": ParamSpec((e, d, f), ("experts", "d_model", "expert_ff"), scale_dim=-2),
+        "down": ParamSpec((e, f, d), ("experts", "expert_ff", "d_model"), scale_dim=-2),
+    }
+    if gated:
+        s["gate"] = ParamSpec((e, d, f), ("experts", "d_model", "expert_ff"), scale_dim=-2)
+    return s
+
+
+def capacity_for(cfg: ModelConfig, seq: int) -> int:
+    ideal = seq * cfg.num_experts_per_tok / cfg.num_experts
+    cap = int(ideal * cfg.moe_capacity_factor) + 1
+    return min(max(cap, cfg.num_experts_per_tok), seq)
+
+
+def moe_apply(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (y (B,S,D), aux_loss scalar fp32)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = capacity_for(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E) fp32
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)           # renormalize
+
+    # Switch aux loss: E * mean(fraction_routed_e * mean_prob_e).
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    frac = jnp.mean(onehot_top1, axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_prob)
+
+    # --- position-in-expert, flattened over (S*K) per batch row ----------
+    flat_e = expert_idx.reshape(b, s * k)                      # (B, S*K)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)            # (B, S*K, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) * oh                     # 1-based
+    pos_in_e = jnp.sum(pos_in_e, axis=-1) - 1                  # (B, S*K)
+    keep = pos_in_e < cap
+
+    # slot table: for (expert, slot) -> source token index (clipped; empty
+    # slots read token 0 but their combine weight is 0).
+    slot_flat = flat_e * cap + jnp.where(keep, pos_in_e, 0)    # (B, S*K)
+    token_of_pair = jnp.broadcast_to(
+        jnp.arange(s * k, dtype=jnp.int32)[None] // k, (b, s * k))
+
+    def fill_row(slots, tokens, keep_row):
+        table = jnp.zeros((e * cap,), jnp.int32)
+        valid = jnp.zeros((e * cap,), jnp.bool_)
+        table = table.at[jnp.where(keep_row, slots, e * cap)].set(
+            tokens, mode="drop")
+        valid = valid.at[jnp.where(keep_row, slots, e * cap)].set(
+            True, mode="drop")
+        return table, valid
+
+    table, valid = jax.vmap(fill_row)(slot_flat, token_of_pair, keep)
+    table = table.reshape(b, e, cap)
+    valid = valid.reshape(b, e, cap)
+
+    # --- gather -> expert compute -> combine ------------------------------
+    xe = jnp.take_along_axis(
+        x, table.reshape(b, e * cap)[..., None], axis=1,
+    ).reshape(b, e, cap, d)
+    xe = xe * valid[..., None].astype(xe.dtype)
+    xe = shard(xe, "batch", "experts", None, "d_model")
+
+    up = jnp.einsum("becd,edf->becf", xe, p["up"])
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xe, p["gate"])
+        h = jax.nn.silu(g) * up
+    elif cfg.mlp_kind == "geglu":
+        g = jnp.einsum("becd,edf->becf", xe, p["gate"])
+        h = jax.nn.gelu(g) * up
+    else:
+        h = jax.nn.gelu(up)
+    ye = jnp.einsum("becf,efd->becd", h, p["down"])            # (B,E,C,D)
+    ye = shard(ye, "batch", "experts", None, "d_model")
+
+    # combine: scatter-add back to tokens with gate weights.
+    gate_flat = (gate_vals.reshape(b, s * k) * keep).astype(ye.dtype)
+    ye_flat = ye.reshape(b, e * cap, d)
+    contrib = jnp.take_along_axis(
+        ye_flat, slot_flat[..., None], axis=1)                 # (B, S*K, D)
+    contrib = contrib * gate_flat[..., None]
+    y = jnp.sum(contrib.reshape(b, s, k, d), axis=2)
+    return shard(y, "batch", "seq", "d_model"), aux.astype(jnp.float32)

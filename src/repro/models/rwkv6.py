@@ -1,0 +1,203 @@
+"""RWKV-6 (Finch) block: token-shift time-mix with data-dependent decay.
+
+Faithful core (arXiv:2404.05892), lightly simplified where the paper's
+micro-parameterization doesn't change the systems shape (single mix LoRA
+shared across r/k/v/g instead of five, RMS head-norm instead of GroupNorm):
+
+  time-mix:   xx_t = x_{t-1} - x_t           (token shift)
+              m_t  = mu + lora_mix(x_t + xx_t * mu)       # data-dep mix
+              x^c_t = x_t + xx_t * m^c_t                  # c in {r,k,v,w,g}
+              r,k,v,g = W_r x^r, W_k x^k, W_v x^v, silu(W_g x^g)
+              w_t  = exp(-exp(w_base + lora_w(x^w_t)))    # per-channel decay
+              o_t[v]  = sum_k r[k] (S[k,v] + u[k] k[k] v[v])
+              S_t  = diag(w_t) S_{t-1} + k_t (x) v_t      # per head
+              y    = W_o (headnorm(o) * g)
+
+  channel-mix: standard MLP on token-shifted input (cfg.mlp_kind).
+
+The WKV recurrence runs under ``jax.lax.scan`` (single-step for decode);
+the chunked Pallas kernel in ``repro.kernels.rwkv6_scan`` is the TPU-target
+implementation.  Recurrence FLOPs/bytes are reported analytically by
+``recurrence_cost`` (cost_analysis counts scan bodies once; DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamSpec
+from repro.models.sharding import shard
+
+LORA_RANK = 64
+
+
+def num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    h, hd = num_heads(cfg), cfg.rwkv_head_dim
+    r = LORA_RANK
+    return {
+        "mu": ParamSpec((5, d), (None, "d_model"), init="zeros"),
+        "mix_a": ParamSpec((d, r), ("d_model", None), scale_dim=-2),
+        "mix_b": ParamSpec((r, 5, d), (None, None, "d_model"), init="zeros"),
+        "w_base": ParamSpec((d,), ("d_model",), init="zeros"),
+        "w_a": ParamSpec((d, r), ("d_model", None), scale_dim=-2),
+        "w_b": ParamSpec((r, d), (None, "d_model"), init="zeros"),
+        "u": ParamSpec((h, hd), ("heads", "head_dim"), init="zeros"),
+        "wr": ParamSpec((d, d), ("d_model", "heads_x_dim"), scale_dim=-2),
+        "wk": ParamSpec((d, d), ("d_model", "heads_x_dim"), scale_dim=-2),
+        "wv": ParamSpec((d, d), ("d_model", "heads_x_dim"), scale_dim=-2),
+        "wg": ParamSpec((d, d), ("d_model", "heads_x_dim"), scale_dim=-2),
+        "wo": ParamSpec((d, d), ("heads_x_dim", "d_model"), scale_dim=-2),
+        "head_scale": ParamSpec((h, hd), ("heads", "head_dim"), init="ones"),
+    }
+
+
+def channel_mix_schema(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("d_model",), init="zeros"),
+        "wk_cm": ParamSpec((d, f), ("d_model", "d_ff"), scale_dim=-2),
+        "wv_cm": ParamSpec((f, d), ("d_ff", "d_model"), scale_dim=-2),
+    }
+
+
+def channel_mix(p, cfg: ModelConfig, x, x_prev):
+    """RWKV channel-mix: squared-relu FFN on token-shifted input.
+    x (B,S,D), x_prev (B,D) -> (y, new_x_prev)."""
+    prev = _token_shift(x, x_prev)
+    xk = x + (prev - x) * p["mu_k"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk_cm"])
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, "batch", "seq", "d_ff")
+    y = jnp.einsum("bsf,fd->bsd", k, p["wv_cm"])
+    return shard(y, "batch", "seq", "d_model"), x[:, -1, :]
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype):
+    h, hd = num_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_cm": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def abstract_state(cfg: ModelConfig, batch: int, dtype):
+    h, hd = num_heads(cfg), cfg.rwkv_head_dim
+    dt = jnp.dtype(dtype)
+    return {
+        "s": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+        "x_tm": jax.ShapeDtypeStruct((batch, cfg.d_model), dt),
+        "x_cm": jax.ShapeDtypeStruct((batch, cfg.d_model), dt),
+    }
+
+
+STATE_LOGICAL = {
+    "s": ("batch", "heads", "head_dim", "head_dim2"),
+    "x_tm": ("batch", "d_model"),
+    "x_cm": ("batch", "d_model"),
+}
+
+
+def _kernel_scan(r32, k32, v32, w, u, s0):
+    """Route the WKV recurrence through the Pallas kernel (inputs are
+    (B,S,H,hd); the kernel wants (B,H,S,hd))."""
+    from repro.kernels import ops as kernel_ops
+
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    return kernel_ops.rwkv6_scan(tr(r32), tr(k32), tr(v32), tr(w),
+                                 u, s0.astype(jnp.float32))
+
+
+def _token_shift(x, x_prev):
+    """x (B,S,D), x_prev (B,D) -> previous-token tensor (B,S,D)."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def _mix_heads(p, cfg, x, xx):
+    """Data-dependent token-shift mixing -> the five mixed streams."""
+    mu = p["mu"]                                       # (5, D)
+    base = x[:, :, None, :] + xx[:, :, None, :] * mu[None, None]
+    lora_in = jnp.tanh(jnp.einsum("bsd,dr->bsr", x + xx * mu[0], p["mix_a"]))
+    delta = jnp.einsum("bsr,rcd->bscd", lora_in, p["mix_b"])   # (B,S,5,D)
+    mixed = base + xx[:, :, None, :] * delta
+    return [mixed[:, :, i, :] for i in range(5)]       # r,k,v,w,g streams
+
+
+def _decay(p, xw):
+    """Per-channel decay in (0,1): w = exp(-exp(w_base + lora_w(xw)))."""
+    lo = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), p["w_a"])
+    raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", lo, p["w_b"]).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(raw - 3.0))                # -3: init near slow decay
+
+
+def _headnorm(o, scale, eps=1e-6):
+    ms = jnp.mean(jnp.square(o), -1, keepdims=True)
+    return o * jax.lax.rsqrt(ms + eps) * scale[None, None]
+
+
+def rwkv_time_mix(p, cfg: ModelConfig, x, state, allow_kernel: bool = False):
+    """x (B,S,D), state {"s","x_tm",...} -> (y (B,S,D), partial new state).
+    Returns (y, {"s": ..., "x_tm": ...}); the caller merges "x_cm" after the
+    channel-mix."""
+    b, s, d = x.shape
+    h, hd = num_heads(cfg), cfg.rwkv_head_dim
+    prev = _token_shift(x, state["x_tm"])
+    xx = prev - x
+    xr, xk, xv, xw, xg = _mix_heads(p, cfg, x, xx)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    w = _decay(p, xw).reshape(b, s, h, hd)             # fp32
+    u = p["u"].astype(jnp.float32)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+
+    from repro.kernels.ops import kernels_enabled
+    # kernel path is inference-only (no custom VJP on the Pallas kernel)
+    if allow_kernel and kernels_enabled():
+        # TPU path: the chunked-parallel Pallas WKV kernel.
+        out, s_final = _kernel_scan(r32, k32, v32, w, u, state["s"])
+        o = out.transpose(0, 2, 1, 3)                   # (B,S,H,hd)
+    else:
+        def step(S, t):
+            r_t, k_t, v_t, w_t = t                      # (B,H,hd) each
+            kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+            o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                           S + u[None, :, :, None] * kv)
+            S = w_t[..., :, None] * S + kv
+            return S, o
+
+        xs = tuple(t.transpose(1, 0, 2, 3) for t in (r32, k32, v32, w))
+        s_final, os_ = jax.lax.scan(step, state["s"], xs)
+        o = os_.transpose(1, 0, 2, 3)                   # (B,S,H,hd)
+    o = _headnorm(o, p["head_scale"].astype(jnp.float32))
+    o = (o.reshape(b, s, d)).astype(x.dtype) * g
+    y = jnp.einsum("bse,ed->bsd", o, p["wo"])
+    new_state = {"s": shard(s_final, *STATE_LOGICAL["s"]), "x_tm": x[:, -1, :]}
+    return shard(y, "batch", "seq", "d_model"), new_state
+
+
+def rwkv_apply(p, cfg: ModelConfig, x):
+    y, _ = rwkv_time_mix(p, cfg, x, init_state(cfg, x.shape[0], x.dtype))
+    return y
+
+
+def recurrence_cost(cfg: ModelConfig, batch: int, seq: int) -> Tuple[float, float]:
+    """Analytic (flops, bytes) for the WKV scan core."""
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    # per token per channel-pair: kv outer + bonus + r.S reduce + decay-update
+    per_tok = d * hd * 8.0
+    flops = batch * seq * per_tok
+    bytes_ = batch * seq * (4 * d * 4.0 + 2 * d * hd * 4.0)  # r,k,v,w + state rw
+    return flops, bytes_

@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every tensor in the model is annotated with *logical* axis names; a
+``Rules`` table maps logical names to mesh axes.  Changing the distribution
+strategy (the §Perf hillclimb lever) means editing a rules table, not model
+code.
+
+Two practical refinements over the plain table lookup:
+
+  * **shape-aware filtering** — an assignment is dropped when the dimension
+    size does not divide the mesh-axis size (e.g. 8 KV heads over a
+    16-way ``model`` axis, whisper's vocab 51865).  This keeps every
+    (arch x shape x mesh) combination lowerable with one rules table.
+  * **dedup (first wins)** — a mesh axis may appear once per
+    PartitionSpec; later logical axes that map to an already-used mesh
+    axis fall back to replicated.  This is what lets weights declare
+    ``d_model -> data`` (FSDP) while activations (whose leading ``batch``
+    already claims ``data``) keep ``d_model`` replicated.
+
+When no rules are active (CPU unit tests), ``shard()`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class Rules:
+    def __init__(self, table: Dict[str, MeshAxes], axis_sizes: Dict[str, int]):
+        self.table = dict(table)
+        self.axis_sizes = dict(axis_sizes)
+
+    def _resolve(self, name: Optional[str]) -> Tuple[str, ...]:
+        ax = self.table.get(name) if name else None
+        if ax is None:
+            return ()
+        if isinstance(ax, str):
+            ax = (ax,)
+        return tuple(a for a in ax if a in self.axis_sizes)
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        parts, used = [], set()
+        for i, name in enumerate(logical):
+            axes = self._resolve(name)
+            kept = []
+            size_ok = True
+            for a in axes:
+                if a in used:
+                    continue
+                kept.append(a)
+            if shape is not None and kept:
+                total = 1
+                for a in kept:
+                    total *= self.axis_sizes[a]
+                if shape[i] % total != 0:
+                    size_ok = False
+            if kept and size_ok:
+                used.update(kept)
+                parts.append(tuple(kept) if len(kept) > 1 else kept[0])
+            else:
+                parts.append(None)
+        return P(*parts)
+
+
+# ----------------------------------------------------------------------
+# Rule tables.  Variants:
+#   dp    — the paper's own strategy: pure data parallel (Spark/Elephas).
+#   tp    — production baseline: DP over (pod, data) + tensor parallel
+#           over ``model`` (Megatron pattern); decode shards the KV length
+#           over ``model`` (flash-decoding style).
+#   fsdp  — tp + weight/optimizer d_model sharded over ``data`` (beyond-
+#           paper; the §Perf memory lever for the 100B+ configs).
+# ----------------------------------------------------------------------
+
+_COMMON_TP = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "frames": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_x_dim": "model",
+    "head_dim": None,
+    "head_dim2": None,
+    "d_ff": "model",
+    "expert_ff": "model",   # claims model when "experts" does not divide (grok: 8e on 16)
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "d_model": None,
+    "kv_len": None,
+}
+
+RULE_TABLES: Dict[str, Dict[str, Dict[str, MeshAxes]]] = {
+    "dp": {
+        "train": {"batch": ("pod", "data")},
+        "prefill": {"batch": ("pod", "data")},
+        "decode": {"batch": ("pod", "data")},
+    },
+    # prefill also shards the PRODUCED kv cache over the model axis
+    # ("kv_len": the cache is an output, never contracted during prefill) —
+    # without it the 32k cache alone is 21 GiB/device at 110B scale
+    # (EXPERIMENTS.md §Perf-prefill).
+    "tp": {
+        "train": dict(_COMMON_TP),
+        "prefill": {**_COMMON_TP, "kv_len": "model"},
+        "decode": {**_COMMON_TP, "kv_len": "model"},
+    },
+    "fsdp": {
+        "train": {**_COMMON_TP, "d_model": "data"},
+        "prefill": {**_COMMON_TP, "d_model": "data", "kv_len": "model"},
+        "decode": {**_COMMON_TP, "kv_len": "model", "d_model": "data"},
+    },
+    # Sequence parallel: activations shard (batch, seq) over (data, model);
+    # weights replicated.  The §Perf lever for architectures whose head
+    # count does NOT divide the model axis (phi4: 24 heads on 16) — under
+    # "tp" their attention replicates over the model axis entirely.  Axis
+    # dedup makes this graceful: archs whose heads DO divide keep
+    # head-sharding and ignore the seq rule.
+    "sp": {
+        "train": {**_COMMON_TP, "seq": "model", "d_model": None,
+                  "d_ff": None, "vocab": "model"},
+        "prefill": {**_COMMON_TP, "seq": "model", "d_ff": None},
+        "decode": {**_COMMON_TP, "kv_len": "model"},
+    },
+}
+
+
+def make_rules(mesh, mode: str, variant: str = "tp") -> Rules:
+    table = RULE_TABLES[variant][mode]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return Rules(table, sizes)
+
+
+# ----------------------------------------------------------------------
+_ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+def shard(x, *logical: Optional[str]):
+    """Apply a sharding constraint by logical axis names (no-op w/o rules)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, rules.spec(logical, x.shape))

@@ -1,0 +1,162 @@
+"""Mamba-style selective SSM layer (Jamba's recurrent half).
+
+Simplified-but-faithful selective scan (matches the analytic param count in
+``configs/base.py``): per layer
+
+    (x_in, z) = in_proj(x)                       # each (B, S, d_in)
+    x_c       = causal_depthwise_conv(x_in)      # width ``ssm_conv_width``
+    (dt, B, C) = x_proj(silu(x_c))               # dt scalar/token + bias
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t     # A = -exp(A_log), (d_in, N)
+    y_t = (C_t . h_t) * silu(z_t)
+    out = out_proj(y)
+
+The recurrence is evaluated with ``jax.lax.scan`` over time (decode is the
+single-step specialization).  Because XLA's ``cost_analysis`` counts a scan
+body once (measured — see DESIGN.md §Roofline-method), the recurrence's
+FLOPs/bytes are reported analytically by ``recurrence_cost``; the
+projections and conv are ordinary matmuls counted from HLO.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamSpec
+from repro.models.sharding import shard
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def ssm_schema(cfg: ModelConfig):
+    d, n, w = cfg.d_model, cfg.ssm_state_dim, cfg.ssm_conv_width
+    di = d_inner(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("d_model", "d_ff"), scale_dim=-2),
+        "conv": ParamSpec((w, di), ("conv", "d_ff"), init="scaled", scale_dim=-2),
+        "x_proj": ParamSpec((di, 2 * n + 1), ("d_ff", "state"), scale_dim=-2),
+        "dt_bias": ParamSpec((di,), ("d_ff",), init="zeros"),
+        "a_log": ParamSpec((di, n), ("d_ff", "state"), init="ones"),
+        "out_proj": ParamSpec((di, d), ("d_ff", "d_model"), scale_dim=-2),
+    }
+
+
+def _split_proj(p, cfg, x):
+    """x (B,S,D) -> x_in, z, each (B,S,di)."""
+    di = d_inner(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = shard(xz, "batch", "seq", "d_ff")
+    return xz[..., :di], xz[..., di:]
+
+
+def _conv_step_weights(p):
+    return p["conv"]  # (W, di)
+
+
+def _causal_conv(p, x_in, prev=None):
+    """Depthwise causal conv over time.  x_in (B,S,di); ``prev`` (B,W-1,di)
+    supplies left context (decode / chunked prefill)."""
+    w = p["conv"].shape[0]
+    if prev is None:
+        prev = jnp.zeros(x_in.shape[:1] + (w - 1,) + x_in.shape[2:], x_in.dtype)
+    xp = jnp.concatenate([prev, x_in], axis=1)          # (B, S+W-1, di)
+    out = sum(
+        xp[:, i : i + x_in.shape[1]] * p["conv"][i][None, None, :]
+        for i in range(w)
+    )
+    return out, xp[:, -(w - 1):]                        # (B,S,di), new prev
+
+
+def _selective_terms(p, cfg, x_c):
+    """-> dt (B,S,di) fp32, Bm (B,S,N) fp32, Cm (B,S,N) fp32."""
+    n = cfg.ssm_state_dim
+    xc = jax.nn.silu(x_c)
+    proj = jnp.einsum("bsd,dk->bsk", xc.astype(jnp.float32),
+                      p["x_proj"].astype(jnp.float32))
+    dt = jax.nn.softplus(proj[..., :1] + p["dt_bias"].astype(jnp.float32))
+    bm, cm = proj[..., 1 : 1 + n], proj[..., 1 + n :]
+    return dt, bm, cm, xc
+
+
+def ssm_apply(p, cfg: ModelConfig, x) -> jax.Array:
+    """Full-sequence forward (train / prefill without cache)."""
+    y, _ = ssm_forward(p, cfg, x, state=None)
+    return y
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype):
+    di, n, w = d_inner(cfg), cfg.ssm_state_dim, cfg.ssm_conv_width
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, di), dtype),
+    }
+
+
+def abstract_state(cfg: ModelConfig, batch: int, dtype):
+    di, n, w = d_inner(cfg), cfg.ssm_state_dim, cfg.ssm_conv_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, di, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, w - 1, di), jnp.dtype(dtype)),
+    }
+
+
+STATE_LOGICAL = {
+    "h": ("batch", "d_ff", "state"),
+    "conv": ("batch", "conv", "d_ff"),
+}
+
+
+def ssm_forward(p, cfg: ModelConfig, x, state=None):
+    """Forward over a (possibly long) sequence, returning final state.
+    x (B,S,D) -> (y (B,S,D), state)."""
+    b = x.shape[0]
+    if state is None:
+        state = init_state(cfg, b, x.dtype)
+    x_in, z = _split_proj(p, cfg, x)
+    x_c, new_conv = _causal_conv(p, x_in, state["conv"])
+    dt, bm, cm, xc = _selective_terms(p, cfg, x_c)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (di, N)
+
+    def step(h, t):
+        dt_t, b_t, c_t, x_t = t                          # (B,1)/(B,N)/(B,N)/(B,di)
+        decay = jnp.exp(dt_t[..., None] * a[None])       # (B,di,N)
+        h = decay * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2),                           # (S,B,1)
+        bm.transpose(1, 0, 2),
+        cm.transpose(1, 0, 2),
+        xc.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, state["h"], xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)            # (B,S,di)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,do->bso", y, p["out_proj"])
+    out = shard(out, "batch", "seq", "d_model")
+    new_state = {"h": h_final, "conv": new_conv}
+    new_state = {k: shard(v, *STATE_LOGICAL[k]) for k, v in new_state.items()}
+    return out, new_state
+
+
+def ssm_decode(p, cfg: ModelConfig, x, state):
+    """Single-token decode: x (B,1,D) -> (y (B,1,D), new state)."""
+    return ssm_forward(p, cfg, x, state)
+
+
+def recurrence_cost(cfg: ModelConfig, batch: int, seq: int) -> Tuple[float, float]:
+    """Analytic (flops, bytes) of the scan core over ``seq`` steps (see
+    module docstring for why this is not taken from cost_analysis)."""
+    di, n = d_inner(cfg), cfg.ssm_state_dim
+    per_tok = di * n * 8.0           # decay-exp, 2 mul-adds, C reduction
+    flops = batch * seq * per_tok
+    # streams: dt/B/C/x per token + state read/write per token (fp32)
+    bytes_ = batch * seq * (
+        (1 + 2 * n + di) * 4.0 + 2 * di * n * 4.0
+    )
+    return flops, bytes_

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (adam, adamw, momentum, sgd, apply_updates,
+                                    clip_by_global_norm, Optimizer)
+from repro.optim.schedules import constant, cosine_warmup
+
+__all__ = ["adam", "adamw", "momentum", "sgd", "apply_updates",
+           "clip_by_global_norm", "Optimizer", "constant", "cosine_warmup"]

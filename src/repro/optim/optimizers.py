@@ -1,0 +1,117 @@
+"""Optimizers as (init, update) pairs over pytrees (optax-shaped, built
+here because the container is offline).
+
+``update`` returns (new_updates, new_state); ``apply_updates`` adds them.
+All moments are fp32 regardless of parameter dtype (bf16-safe); the
+returned update is cast back to the parameter dtype.
+
+ZeRO-1 sharding happens OUTSIDE this module: optimizer state mirrors the
+parameter pytree, so ``launch.dryrun`` re-shards the state tree with its
+own rules table (see sharding.RULE_TABLES) — the optimizer math is
+sharding-oblivious.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params)
+
+
+def _f32_like(p):
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["count"]
+        upd = jax.tree.map(
+            lambda g, p: (-lr_fn(step) * g.astype(jnp.float32)).astype(p.dtype),
+            grads, params)
+        return upd, {"count": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(_f32_like, params)}
+
+    def update(grads, state, params):
+        step = state["count"]
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        upd = jax.tree.map(lambda m, p: (-lr_fn(step) * m).astype(p.dtype),
+                           mu, params)
+        return upd, {"count": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr_fn, b1, b2, eps, weight_decay):
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(_f32_like, params),
+            "nu": jax.tree.map(_f32_like, params),
+        }
+
+    def update(grads, state, params):
+        step = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step - 1)
+
+        def u(m, n, p):
+            upd = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * upd).astype(p.dtype)
+
+        upd = jax.tree.map(u, mu, nu, params)
+        return upd, {"count": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    return _adam_core(lr_fn, b1, b2, eps, 0.0)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    return _adam_core(lr_fn, b1, b2, eps, weight_decay)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return f
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def f(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f

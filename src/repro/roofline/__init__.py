@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (collective_bytes, roofline_terms,
+                                     model_flops, RooflineResult)
+
+__all__ = ["collective_bytes", "roofline_terms", "model_flops",
+           "RooflineResult"]

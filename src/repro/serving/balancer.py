@@ -1,0 +1,88 @@
+"""Replica load balancing — the NGINX analogue.
+
+The paper fronts its site with 3 NGINX replicas behind a K8s service.
+Reproduced as policy objects over a replica pool with live in-flight
+accounting; ``power_of_two`` is the beyond-paper addition (NGINX itself
+only gained p2c in Plus) and is what the §Perf serving iteration measures.
+
+Replicas have a concurrency limit and a bounded wait queue; dispatching to
+a saturated pool raises ``Overloaded`` (the 429 path in the paper's
+locust runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+
+
+class Overloaded(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Replica:
+    rid: int
+    concurrency: int          # simultaneous requests it can serve
+    queue_limit: int          # waiting slots beyond that
+    in_flight: int = 0
+    served: int = 0
+
+    @property
+    def load(self) -> int:
+        return self.in_flight
+
+    @property
+    def full(self) -> bool:
+        return self.in_flight >= self.concurrency + self.queue_limit
+
+
+class LoadBalancer:
+    """policy in {"round_robin", "random", "least_loaded", "power_of_two"}."""
+
+    def __init__(self, num_replicas: int = 3, concurrency: int = 4,
+                 queue_limit: int = 16, policy: str = "round_robin",
+                 seed: int = 0):
+        self.replicas = [Replica(i, concurrency, queue_limit)
+                         for i in range(num_replicas)]
+        self.policy = policy
+        self._rr = 0
+        self._rng = random.Random(seed)
+        self.dispatched = 0
+        self.rejected = 0
+
+    def pick(self) -> Replica:
+        cand = [r for r in self.replicas if not r.full]
+        if not cand:
+            self.rejected += 1
+            raise Overloaded("all replicas saturated")
+        if self.policy == "round_robin":
+            for _ in range(len(self.replicas)):
+                r = self.replicas[self._rr % len(self.replicas)]
+                self._rr += 1
+                if not r.full:
+                    break
+        elif self.policy == "random":
+            r = self._rng.choice(cand)
+        elif self.policy == "least_loaded":
+            r = min(cand, key=lambda r: r.load)
+        elif self.policy == "power_of_two":
+            a, b = self._rng.choice(cand), self._rng.choice(cand)
+            r = a if a.load <= b.load else b
+        else:
+            raise ValueError(self.policy)
+        r.in_flight += 1
+        self.dispatched += 1
+        return r
+
+    def release(self, r: Replica) -> None:
+        r.in_flight -= 1
+        r.served += 1
+
+    def max_load(self) -> int:
+        return max(r.load for r in self.replicas)
+
+    def imbalance(self) -> float:
+        loads = [r.served for r in self.replicas]
+        mean = sum(loads) / len(loads)
+        return (max(loads) - min(loads)) / max(mean, 1.0)

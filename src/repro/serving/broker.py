@@ -1,0 +1,116 @@
+"""Partitioned message log — the Kafka/ZooKeeper analogue.
+
+The paper runs 3 Kafka brokers + 1 ZooKeeper and has Flask publish each
+canvas drawing to "a randomly assigned broker"; a consumer job reads and
+classifies.  The transferable semantics reproduced here:
+
+  * N partitions, each an append-only offset-indexed log,
+  * producer-side partition assignment (random, like the paper, or keyed),
+  * consumer groups with per-partition committed offsets,
+  * at-least-once delivery: un-committed polls are re-delivered,
+  * bounded partitions: produce to a full partition fails (backpressure —
+    this is what turns overload into fast 429s in the load tests, the
+    behaviour the paper measured at 50 users).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class PartitionFull(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Record:
+    offset: int
+    key: Optional[str]
+    value: Any
+    timestamp: float
+
+
+class Broker:
+    def __init__(self, num_partitions: int = 3, max_depth: int = 1024,
+                 seed: int = 0):
+        self.num_partitions = num_partitions
+        self.max_depth = max_depth
+        self._logs: List[List[Record]] = [[] for _ in range(num_partitions)]
+        self._start: List[int] = [0] * num_partitions   # truncation base
+        self._committed: Dict[Tuple[str, int], int] = {}
+        self._lock = threading.Lock()
+        self._rng = random.Random(seed)
+        self.produced = 0
+        self.rejected = 0
+
+    # ------------------------------------------------------------ produce
+    def partition_for(self, key: Optional[str]) -> int:
+        if key is None:
+            return self._rng.randrange(self.num_partitions)
+        return hash(key) % self.num_partitions
+
+    def produce(self, value: Any, key: Optional[str] = None,
+                timestamp: float = 0.0) -> Tuple[int, int]:
+        """-> (partition, offset); raises PartitionFull on backpressure."""
+        with self._lock:
+            p = self.partition_for(key)
+            if len(self._logs[p]) >= self.max_depth:
+                # capacity pressure: truncate what every known group has
+                # consumed (Kafka-style retention — never on commit, so a
+                # late-joining group still sees retained records).
+                self._gc(p)
+            log = self._logs[p]
+            if len(log) >= self.max_depth:
+                self.rejected += 1
+                raise PartitionFull(f"partition {p} at depth {len(log)}")
+            offset = self._start[p] + len(log)
+            log.append(Record(offset, key, value, timestamp))
+            self.produced += 1
+            return p, offset
+
+    def _groups(self):
+        return {g for (g, _p) in self._committed}
+
+    # ------------------------------------------------------------ consume
+    def poll(self, group: str, partition: int, max_records: int = 64
+             ) -> List[Record]:
+        """Read from the group's committed offset (at-least-once: the same
+        records come back until committed)."""
+        with self._lock:
+            base = self._committed.get((group, partition),
+                                       self._start[partition])
+            log = self._logs[partition]
+            lo = base - self._start[partition]
+            return list(log[lo : lo + max_records])
+
+    def commit(self, group: str, partition: int, offset: int) -> None:
+        """Commit offsets < ``offset`` as consumed, then GC fully-consumed
+        prefixes."""
+        with self._lock:
+            cur = self._committed.get((group, partition),
+                                      self._start[partition])
+            self._committed[(group, partition)] = max(cur, offset)
+
+    def _gc(self, p: int) -> None:
+        groups = self._groups()
+        if not groups:
+            return
+        low = min(self._committed.get((g, p), self._start[p]) for g in groups)
+        drop = low - self._start[p]
+        if drop > 0:
+            self._logs[p] = self._logs[p][drop:]
+            self._start[p] = low
+
+    # ------------------------------------------------------------ stats
+    def depth(self, partition: int, group: Optional[str] = None) -> int:
+        with self._lock:
+            if group is None:
+                return len(self._logs[partition])
+            base = self._committed.get((group, partition),
+                                       self._start[partition])
+            return self._start[partition] + len(self._logs[partition]) - base
+
+    def total_depth(self, group: Optional[str] = None) -> int:
+        return sum(self.depth(p, group) for p in range(self.num_partitions))

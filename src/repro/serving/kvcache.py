@@ -1,0 +1,107 @@
+"""Serving-side KV-cache slot manager for continuous-batching LLM decode.
+
+The model's decode cache is a batched pytree (leading batch axis = slots).
+``SlotManager`` tracks which slots are live; ``write_slot`` /
+``clear_slot`` splice a single request's prefill cache into the batched
+cache.  Freed slots are *not* zeroed eagerly — their ``pos`` lanes are
+invalidated (set to -1 / zero state) so stale keys can never win the
+attention mask; the slot is reused by the next prefill.
+
+This is the TPU-native shape of vLLM's insight: on GPUs, paged KV blocks
+fight fragmentation of a global HBM pool; under XLA, buffers are static,
+so the equivalent mechanism is a fixed slot-batched cache with masked
+liveness + in-place splicing (dynamic_update_slice), which keeps every
+decode step a single fixed-shape XLA program.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotManager:
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots))
+        self._live: set = set()
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        s = self._free.pop(0)
+        self._live.add(s)
+        return s
+
+    def free(self, slot: int) -> None:
+        self._live.discard(slot)
+        self._free.append(slot)
+        self._free.sort()
+
+    @property
+    def live(self) -> List[int]:
+        return sorted(self._live)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+
+def write_slot(batched_cache: Any, single_cache: Any, slot: int) -> Any:
+    """Splice a (B=1)-batched cache pytree into slot ``slot``.
+
+    Handles the stacked-period layout: leaves whose rank matches have the
+    batch axis at position 0 (rem layers / encdec) or 1 (period-stacked,
+    leading ``n_periods``).  The single cache comes from ``Model.prefill``
+    with batch 1, so the batch axis is the one of size 1 whose batched
+    counterpart is ``num_slots``-sized.
+    """
+
+    def splice(big, small):
+        axis = _batch_axis(big.shape, small.shape)
+        idx = [0] * big.ndim
+        idx[axis] = slot
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            tuple(idx))
+
+    return jax.tree.map(splice, batched_cache, single_cache)
+
+
+def _batch_axis(big_shape, small_shape) -> int:
+    for i, (b, s) in enumerate(zip(big_shape, small_shape)):
+        if s == 1 and b != s:
+            return i
+    # identical shapes: batch axis is wherever caller said; default 0
+    for i, (b, s) in enumerate(zip(big_shape, small_shape)):
+        if b != s:
+            return i
+    return 0
+
+
+def _is_logical(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def invalidate_slot(batched_cache: Any, cache_logical: Any, slot: int) -> Any:
+    """Kill a slot's attention validity: position lanes -> -1, states -> 0.
+
+    ``cache_logical`` mirrors the cache structure with logical-axis name
+    tuples at the leaves (Model.cache_logical()).
+    """
+    leaves, treedef = jax.tree.flatten(batched_cache)
+    logicals = jax.tree.flatten(cache_logical, is_leaf=_is_logical)[0]
+    assert len(leaves) == len(logicals)
+
+    out = []
+    for leaf, logical in zip(leaves, logicals):
+        # period-stacked leaves carry a leading "layers" axis before batch
+        axis = 1 if (logical and logical[0] == "layers") else 0
+        names = logical[1:] if axis else logical
+        row = jax.lax.index_in_dim(leaf, slot, axis, keepdims=True)
+        is_pos = jnp.issubdtype(leaf.dtype, jnp.integer) and "kv_len" in names
+        fill = jnp.full_like(row, -1) if is_pos else jnp.zeros_like(row)
+        out.append(jax.lax.dynamic_update_slice_in_dim(leaf, fill, slot,
+                                                       axis=axis))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,290 @@
+"""The Stratus serving pipeline, end to end, plus the beyond-paper LLM
+continuous-batching engine.
+
+``StratusApp`` wires the paper's Fig. 1/2 components in-process:
+
+    client -> LoadBalancer (NGINX x3) -> flask service time -> Broker
+    (Kafka x3 partitions) -> consumer job (micro-batched CNN inference,
+    REAL jitted model execution, measured and charged to virtual time)
+    -> ResultStore (CouchDB) -> flask poll -> client
+
+Request outcomes mirror the paper's §III failure modes: fast 429 when the
+balancer is saturated, 503 when a broker partition is full, 504 when the
+result doesn't appear before the client timeout.
+
+``LLMEngine`` is the production inference path for the architecture pool:
+slot-based continuous batching over ``Model.prefill``/``decode_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.balancer import LoadBalancer, Overloaded
+from repro.serving.broker import Broker, PartitionFull
+from repro.serving.kvcache import SlotManager, write_slot
+from repro.serving.sim import Clock, QueuedResource
+from repro.serving.store import ResultStore
+
+
+# ---------------------------------------------------------------- Stratus
+
+
+@dataclasses.dataclass
+class AppConfig:
+    """Calibrated to the paper's testbed (two small Chameleon VMs): 3 NGINX
+    replicas serving a slow static bundle (~2.5 s), a single-message
+    consumer (the paper-faithful default, ``max_batch=1``) behind 3 Kafka
+    partitions.  The §Perf-serving iteration flips ``max_batch``/policy."""
+
+    # NGINX tier (GET path, paper §III.B)
+    nginx_replicas: int = 3
+    nginx_concurrency: int = 3         # worker_connections per replica
+    nginx_queue: int = 8               # listen backlog
+    balancer_policy: str = "round_robin"
+    static_service: float = 2.5        # paper: ~2.95 s GET at 10 users
+    reject_latency: float = 0.3        # paper: ~306 ms mean at 98% fail
+    # flask tier (POST path goes straight to Flask:30005 in the paper)
+    flask_concurrency: int = 8
+    flask_queue: int = 64
+    flask_service: float = 0.05
+    # kafka tier
+    partitions: int = 3
+    partition_depth: int = 256
+    # consumer tier
+    num_consumers: int = 1
+    poll_interval: float = 0.05
+    max_batch: int = 1                 # paper: one message at a time
+    batch_wait: float = 0.02
+    consume_base: float = 0.35         # per-call overhead (consumer job)
+    consume_jitter: float = 0.5        # +- fraction of consume_base
+    # client behaviour
+    poll_store_every: float = 0.25
+    client_timeout: float = 30.0
+
+
+@dataclasses.dataclass
+class Outcome:
+    ok: bool
+    status: int
+    latency: float
+    kind: str
+
+
+class StratusApp:
+    """The full pipeline under virtual time with real model execution."""
+
+    def __init__(self, clock: Clock, predict_fn: Callable[[np.ndarray], np.ndarray],
+                 cfg: AppConfig = AppConfig(), seed: int = 0):
+        self.clock = clock
+        self.cfg = cfg
+        self.predict_fn = predict_fn
+        self.balancer = LoadBalancer(cfg.nginx_replicas, cfg.nginx_concurrency,
+                                     cfg.nginx_queue, cfg.balancer_policy, seed)
+        self._nginx = [QueuedResource(clock, cfg.nginx_concurrency,
+                                      cfg.nginx_queue)
+                       for _ in range(cfg.nginx_replicas)]
+        self._flask = QueuedResource(clock, cfg.flask_concurrency,
+                                     cfg.flask_queue)
+        self.broker = Broker(cfg.partitions, cfg.partition_depth, seed)
+        self.store = ResultStore()
+        self._rng = np.random.default_rng(seed)
+        self._req_id = 0
+        for c in range(cfg.num_consumers):
+            self._schedule_consumer(c)
+
+    # ------------------------------------------------------------ client
+    def get_page(self, done: Callable[[Outcome], None]) -> None:
+        """GET / — static page through an NGINX replica (paper §III.B).
+        The balancer policy picks the replica; the replica's worker pool +
+        listen backlog decide accept vs 429."""
+        t0 = self.clock.now
+        try:
+            replica = self.balancer.pick()
+        except Overloaded:
+            self.clock.schedule(self.cfg.reject_latency, lambda: done(
+                Outcome(False, 429, self.cfg.reject_latency, "GET")))
+            return
+        res = self._nginx[replica.rid]
+
+        def finish():
+            self.balancer.release(replica)
+            done(Outcome(True, 200, self.clock.now - t0, "GET"))
+
+        if not res.submit(self.cfg.static_service, finish):
+            self.balancer.release(replica)
+            self.clock.schedule(self.cfg.reject_latency, lambda: done(
+                Outcome(False, 429, self.cfg.reject_latency, "GET")))
+
+    def post_predict(self, image: np.ndarray,
+                     done: Callable[[Outcome], None]) -> None:
+        """POST /predict — straight to the Flask backend (port 30005 in the
+        paper; the front-end bypasses NGINX for API calls), then the Fig. 1
+        pipeline: Kafka -> consumer -> CouchDB -> poll."""
+        t0 = self.clock.now
+        self._req_id += 1
+        key = f"req-{self._req_id}"
+
+        def after_flask():
+            try:
+                self.broker.produce({"key": key, "image": image},
+                                    timestamp=self.clock.now)
+            except PartitionFull:
+                done(Outcome(False, 503, self.clock.now - t0, "POST"))
+                return
+            poll_result()
+
+        def poll_result():
+            if self.clock.now - t0 > self.cfg.client_timeout:
+                done(Outcome(False, 504, self.clock.now - t0, "POST"))
+                return
+            doc = self.store.poll(key)
+            if doc is not None:
+                done(Outcome(True, 200, self.clock.now - t0, "POST"))
+            else:
+                self.clock.schedule(self.cfg.poll_store_every, poll_result)
+
+        if not self._flask.submit(self.cfg.flask_service, after_flask):
+            self.clock.schedule(self.cfg.reject_latency, lambda: done(
+                Outcome(False, 429, self.cfg.reject_latency, "POST")))
+
+    # ------------------------------------------------------------ consumer
+    def _schedule_consumer(self, cid: int) -> None:
+        self.clock.schedule(self.cfg.poll_interval,
+                            lambda: self._consume(cid))
+
+    def _consume(self, cid: int) -> None:
+        """One consumer pass: drain up to ``max_batch`` records per owned
+        partition, run the REAL model, write results, commit.  The next
+        poll is scheduled after the virtual busy time (real inference wall
+        time + per-call overhead with jitter)."""
+        cfg = self.cfg
+        busy = 0.0
+        for p in range(cfg.partitions):
+            if p % cfg.num_consumers != cid:
+                continue
+            records = self.broker.poll("stratus", p, cfg.max_batch)
+            if not records:
+                continue
+            images = np.stack([r.value["image"] for r in records])
+            t0 = time.perf_counter()
+            probs = np.asarray(self.predict_fn(images))
+            elapsed = time.perf_counter() - t0
+            for r, pr in zip(records, probs):
+                self.store.upsert_idempotent(
+                    r.value["key"],
+                    {"probs": pr, "digit": int(np.argmax(pr))})
+            self.broker.commit("stratus", p, records[-1].offset + 1)
+            jitter = 1.0 + cfg.consume_jitter * self._rng.uniform(-1, 1)
+            busy += cfg.consume_base * jitter + elapsed
+        self.clock.schedule(max(cfg.poll_interval, busy),
+                            lambda: self._consume(cid))
+
+
+# ---------------------------------------------------------------- LLM
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class LLMEngine:
+    """Continuous-batching decode over the unified Model API."""
+
+    def __init__(self, model, params, num_slots: int = 4,
+                 cache_max: int = 512, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.slots = SlotManager(num_slots)
+        self.cache_max = cache_max
+        self.eos_id = eos_id
+        self.num_slots = num_slots
+        cfg = model.cfg
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            model.cache_abstract(num_slots, cache_max))
+        self.pos = np.full((num_slots,), -1, np.int64)
+        self.active: Dict[int, GenRequest] = {}
+        self.queue: List[GenRequest] = []
+        self._rid = 0
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_max=cache_max))
+        self._decode = jax.jit(model.decode_step)
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               now: float = 0.0) -> int:
+        self._rid += 1
+        self.queue.append(GenRequest(self._rid, np.asarray(prompt, np.int32),
+                                     max_new, submitted=now))
+        return self._rid
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def step(self, now: float = 0.0) -> List[GenRequest]:
+        """Admit one queued request (prefill) OR advance all live slots by
+        one token.  Returns finished requests."""
+        if self.queue and self.slots.num_free > 0:
+            return self._admit(now)
+        if self.active:
+            return self._decode_all(now)
+        return []
+
+    def _admit(self, now: float) -> List[GenRequest]:
+        req = self.queue.pop(0)
+        slot = self.slots.alloc()
+        batch = {"tokens": req.prompt[None, :]}
+        logits, cache1 = self._prefill(self.params, batch)
+        self.cache = write_slot(self.cache, cache1, slot)
+        self.pos[slot] = len(req.prompt)
+        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        req.out_tokens.append(tok)
+        req.first_token_at = now
+        self.active[slot] = req
+        return self._collect(now)
+
+    def _decode_all(self, now: float) -> List[GenRequest]:
+        live = self.slots.live
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        pos = np.maximum(self.pos, 0).astype(np.int32)
+        for s in live:
+            tokens[s, 0] = self.active[s].out_tokens[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(pos))
+        arr = np.asarray(logits)
+        for s in live:
+            req = self.active[s]
+            tok = int(np.argmax(arr[s, 0]))
+            req.out_tokens.append(tok)
+            self.pos[s] += 1
+        return self._collect(now)
+
+    def _collect(self, now: float) -> List[GenRequest]:
+        done = []
+        for s in list(self.active):
+            req = self.active[s]
+            hit_eos = self.eos_id is not None and req.out_tokens and \
+                req.out_tokens[-1] == self.eos_id
+            if len(req.out_tokens) >= req.max_new or hit_eos or \
+                    int(self.pos[s]) + 1 >= self.cache_max:
+                req.finished_at = now
+                done.append(req)
+                del self.active[s]
+                self.slots.free(s)
+                self.pos[s] = -1
+        return done

@@ -1,0 +1,22 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+(single) CPU device; only launch/dryrun.py forces 512 host devices."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def reduced_cfg(arch: str, dropless: bool = True):
+    cfg = get_config(arch).reduced()
+    if dropless and cfg.num_experts:
+        cfg = dataclasses.replace(
+            cfg,
+            moe_capacity_factor=float(cfg.num_experts) / cfg.num_experts_per_tok)
+    return cfg

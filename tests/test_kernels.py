@@ -1,0 +1,188 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the pure-jnp
+oracle in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.conv2d import conv2d
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KEY = jax.random.PRNGKey(0)
+KS = jax.random.split(KEY, 8)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------ flash attn
+
+FA_SHAPES = [
+    # (B, H, KV, Sq, Sk, hd)
+    (1, 4, 4, 64, 64, 64),        # MHA, square
+    (2, 8, 2, 96, 96, 64),        # GQA 4:1, non-multiple seq
+    (1, 8, 1, 128, 128, 128),     # MQA
+    (2, 4, 4, 33, 75, 64),        # ragged cross shapes
+]
+
+
+@pytest.mark.parametrize("shape", FA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_attention_vs_ref(shape, dtype, causal, window):
+    b, h, kv, sq, sk, hd = shape
+    if not causal and sq != sk:
+        q = jax.random.normal(KS[0], (b, h, sq, hd), dtype)
+    else:
+        sk = sq
+        q = jax.random.normal(KS[0], (b, h, sq, hd), dtype)
+    k = jax.random.normal(KS[1], (b, kv, sk, hd), dtype)
+    v = jax.random.normal(KS[2], (b, kv, sk, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **_tol(dtype))
+
+
+def test_flash_attention_blocks_sweep():
+    b, h, kv, s, hd = 1, 2, 2, 80, 64
+    q = jax.random.normal(KS[0], (b, h, s, hd))
+    k = jax.random.normal(KS[1], (b, kv, s, hd))
+    v = jax.random.normal(KS[2], (b, kv, s, hd))
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(16, 16), (16, 64), (64, 16), (128, 128)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------ rwkv6
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 16, 8), (2, 3, 50, 64),
+                                   (1, 2, 128, 64)])
+@pytest.mark.parametrize("chunk", [16, 32])
+@pytest.mark.parametrize("extreme_decay", [False, True])
+def test_rwkv6_scan_vs_ref(shape, chunk, extreme_decay):
+    b, h, s, hd = shape
+    r = jax.random.normal(KS[0], shape)
+    k = jax.random.normal(KS[1], shape)
+    v = jax.random.normal(KS[2], shape)
+    if extreme_decay:
+        w = jnp.exp(-jnp.exp(jax.random.normal(KS[3], shape) * 2))
+    else:
+        w = jnp.full(shape, 0.95)
+    u = jax.random.normal(KS[4], (h, hd)) * 0.1
+    s0 = jax.random.normal(KS[5], (b, h, hd, hd)) * 0.1
+    out, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    eo, es = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eo),
+                               atol=5e-3, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(es),
+                               atol=5e-3, rtol=1e-2)
+
+
+def test_rwkv6_chunked_state_chaining():
+    """Running two half-sequences with carried state == one full run."""
+    b, h, s, hd = 1, 2, 64, 32
+    r = jax.random.normal(KS[0], (b, h, s, hd))
+    k = jax.random.normal(KS[1], (b, h, s, hd))
+    v = jax.random.normal(KS[2], (b, h, s, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(KS[3], (b, h, s, hd))))
+    u = jnp.zeros((h, hd))
+    full, sf = rwkv6_scan(r, k, v, w, u, chunk=16, interpret=True)
+    h1, s1 = rwkv6_scan(r[:, :, :32], k[:, :, :32], v[:, :, :32],
+                        w[:, :, :32], u, chunk=16, interpret=True)
+    h2, s2 = rwkv6_scan(r[:, :, 32:], k[:, :, 32:], v[:, :, 32:],
+                        w[:, :, 32:], u, s1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 2)),
+                               np.asarray(full), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sf),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------ conv2d
+
+
+@pytest.mark.parametrize("shape", [
+    (5, 28, 28, 1, 3, 32),       # the paper's CNN
+    (130, 28, 28, 1, 3, 32),     # batch > block
+    (4, 12, 16, 3, 5, 8),        # rectangular, 5x5
+    (2, 9, 9, 2, 1, 4),          # 1x1
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_vs_ref(shape, dtype):
+    b, hh, ww, cin, k, cout = shape
+    x = jax.random.normal(KS[0], (b, hh, ww, cin), dtype)
+    w = jax.random.normal(KS[1], (k, k, cin, cout), dtype) * 0.2
+    out = conv2d(x, w, interpret=True)
+    expect = ref.conv2d_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **_tol(dtype))
+
+
+# ------------------------------------------------------------ ops dispatch
+
+
+def test_ops_dispatch_cpu_uses_ref(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    q = jax.random.normal(KS[0], (1, 2, 16, 32))
+    k = jax.random.normal(KS[1], (1, 2, 16, 32))
+    v = jax.random.normal(KS[2], (1, 2, 16, 32))
+    out = ops.flash_attention(q, k, v)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5)
+
+
+def test_ops_dispatch_forced_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    x = jax.random.normal(KS[0], (2, 10, 10, 1))
+    w = jax.random.normal(KS[1], (3, 3, 1, 4))
+    out = ops.conv2d(x, w)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.conv2d_ref(x, w)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------- model-path integration
+
+
+def test_model_prefill_via_kernels_matches_jnp(monkeypatch):
+    """REPRO_USE_KERNELS=1 routes the INFERENCE path (prefill) through the
+    Pallas flash / chunked-WKV kernels (interpret mode on CPU); prefill
+    logits must match the jnp path.  Training stays on the differentiable
+    jnp formulation (the kernels carry no custom VJP)."""
+    import sys
+    sys.path.insert(0, "tests")
+    from conftest import reduced_cfg
+    from repro.models.api import Model
+
+    for arch in ("qwen3-0.6b", "gemma3-4b", "rwkv6-1.6b"):
+        cfg = reduced_cfg(arch)
+        model = Model(cfg)
+        params = model.init(KEY)
+        toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)
+        monkeypatch.delenv("REPRO_USE_KERNELS", raising=False)
+        monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+        base, _ = model.prefill(params, {"tokens": toks}, cache_max=32)
+        # route model->ops AND ops->Pallas-interpret (full kernel path)
+        monkeypatch.setenv("REPRO_USE_KERNELS", "1")
+        monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+        kern, _ = model.prefill(params, {"tokens": toks}, cache_max=32)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(base),
+                                   atol=5e-3, rtol=1e-2), arch
+        # gradients still flow on the training path with kernels enabled
+        g = jax.grad(lambda p: model.loss(
+            p, {"tokens": toks, "labels": toks})[0])(params)
+        assert all(bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+                   for x in jax.tree.leaves(g))

@@ -1,0 +1,217 @@
+"""Data pipeline, optimizers, schedules, checkpointing, strategies."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, restore, save
+from repro.core.strategies import (ElasticAveraging, LocalSGD,
+                                   SyncDataParallel)
+from repro.data import mnist
+from repro.data.tokens import make_stream
+from repro.optim import (adam, adamw, apply_updates, clip_by_global_norm,
+                         cosine_warmup, momentum, sgd)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ mnist
+
+
+def test_mnist_interface():
+    x, y = mnist.make_split(100, 0)
+    assert x.shape == (100, 28, 28, 1) and x.dtype == np.float32
+    assert x.min() >= 0 and x.max() <= 1
+    assert np.bincount(y, minlength=10).min() == 10   # balanced
+
+
+def test_mnist_deterministic_and_seeded():
+    x1, y1 = mnist.make_split(50, 7)
+    x2, y2 = mnist.make_split(50, 7)
+    x3, _ = mnist.make_split(50, 8)
+    np.testing.assert_array_equal(x1, x2)
+    assert not np.array_equal(x1, x3)
+
+
+def test_canvas_is_a_shift():
+    """Canvas digits must differ distributionally from train digits
+    (higher mean ink, the aliasing artifacts the paper blames)."""
+    xt, _ = mnist.make_split(200, 0)
+    xc, _ = mnist.canvas_digits(200, 0)
+    assert xc.mean() > xt.mean() * 1.2
+
+
+def test_batches_cover_epoch():
+    x, y = mnist.make_split(130, 0)
+    seen = 0
+    for xb, yb in mnist.batches(x, y, 32, 0, epochs=1):
+        assert xb.shape == (32, 28, 28, 1)
+        seen += 32
+    assert seen == 128                                # ragged tail dropped
+
+
+# ------------------------------------------------------------ tokens
+
+
+def test_token_stream_deterministic_shardable():
+    s = make_stream(512, 64, 8, seed=3)
+    b1, b2 = s.batch(5), s.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    sh0 = s.batch(5, shard=0, num_shards=2)
+    assert sh0["tokens"].shape == (4, 64)
+
+
+def test_token_stream_learnable_structure():
+    """Phrases repeat -> bigram statistics far from uniform."""
+    s = make_stream(512, 256, 4, seed=0)
+    toks = s.batch(0)["tokens"].ravel()
+    uniq = len(set(zip(toks[:-1], toks[1:])))
+    assert uniq < 0.8 * (len(toks) - 1)
+
+
+# ------------------------------------------------------------ optimizers
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: momentum(0.05), lambda: adam(0.1),
+    lambda: adamw(0.1, weight_decay=0.0)])
+def test_optimizers_converge_quadratic(make_opt):
+    opt = make_opt()
+    p = {"w": jnp.array([3.0, -2.0])}
+    st_ = opt.init(p)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(p)
+        u, st_ = opt.update(g, st_, p)
+        p = apply_updates(p, u)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 1e-2
+
+
+def test_adamw_decays_weights():
+    opt = adamw(0.1, weight_decay=0.5)
+    p = {"w": jnp.array([5.0])}
+    st_ = opt.init(p)
+    g = {"w": jnp.array([0.0])}
+    for _ in range(50):
+        u, st_ = opt.update(g, st_, p)
+        p = apply_updates(p, u)
+    assert float(p["w"][0]) < 1.0
+
+
+def test_optimizer_bf16_params_fp32_moments():
+    opt = adam(0.01)
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st_ = opt.init(p)
+    assert st_["mu"]["w"].dtype == jnp.float32
+    u, st_ = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, st_, p)
+    assert u["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), 20.0)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_cosine_warmup_shape():
+    f = cosine_warmup(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) < 0.2
+    np.testing.assert_allclose(float(f(jnp.asarray(10))), 1.0, rtol=1e-2)
+    assert float(f(jnp.asarray(99))) < 0.01
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip_nested():
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 3), jnp.bfloat16),
+                                      "d": [jnp.zeros(1), jnp.ones(2)]}}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, tree)
+        out = restore(d, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_checkpoint_mismatch_raises():
+    tree = {"a": jnp.arange(5)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, tree)
+        with pytest.raises(ValueError, match="mismatch"):
+            restore(d, {"b": jnp.arange(5)})
+
+
+def test_checkpoint_manager_gc_and_latest():
+    tree = {"a": jnp.arange(3)}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        for s in (1, 5, 9):
+            cm.save(s, tree)
+        assert sorted(os.listdir(d)) == ["step_5", "step_9"]
+        step, out = cm.restore_latest(tree)
+        assert step == 9
+
+
+# ------------------------------------------------------------ strategies
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    loss = jnp.mean(jnp.square(pred - batch["y"]))
+    return loss, {"loss": loss}
+
+
+def _make_batches(key, w_true, workers, k, bs, rounds):
+    out = []
+    for r in range(rounds):
+        key, sub = jax.random.split(key)
+        x = jax.random.normal(sub, (workers, k, bs, 4))
+        y = x @ w_true
+        out.append({"x": x, "y": y})
+    return out
+
+
+@pytest.mark.parametrize("strategy_cls,kw", [
+    (SyncDataParallel, {}), (LocalSGD, {}),
+    (ElasticAveraging, {"alpha": 0.3})])
+def test_strategies_fit_linear_model(strategy_cls, kw):
+    from repro.optim import adam as mk
+    w_true = jnp.array([1.0, -2.0, 3.0, 0.5])
+    strat = strategy_cls(optimizer=mk(0.05), num_workers=4, **kw)
+    params = {"w": jnp.zeros(4)}
+    state = strat.init(params)
+    batches = _make_batches(KEY, w_true, 4, 3, 16, 120)
+    for b in batches:
+        params, state, m = strat.round(params, state, b, _quad_loss)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(w_true),
+                               atol=0.15)
+
+
+def test_sync_equals_large_batch():
+    """SyncDataParallel over W workers == single worker with W x batch
+    (gradient averaging exactness)."""
+    from repro.optim import sgd as mk
+    w0 = {"w": jnp.array([1.0, 1.0, 1.0, 1.0])}
+    batches = _make_batches(KEY, jnp.array([0., 1., 2., 3.]), 4, 1, 8, 3)
+
+    strat = SyncDataParallel(optimizer=mk(0.1), num_workers=4)
+    pa, state = w0, strat.init(w0)
+    for b in batches:
+        pa, state, _ = strat.round(pa, state, b, _quad_loss)
+
+    pb, st_ = w0, mk(0.1).init(w0)
+    opt = mk(0.1)
+    for b in batches:
+        flat = {k: v.reshape(-1, *v.shape[3:]) for k, v in b.items()}
+        g = jax.grad(lambda p: _quad_loss(p, flat)[0])(pb)
+        u, st_ = opt.update(g, st_, pb)
+        pb = apply_updates(pb, u)
+    np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb["w"]),
+                               rtol=1e-5)
