@@ -224,6 +224,85 @@ def bench_llm_engine():
 
 
 # ----------------------------------------------------------------------
+# 7b. Paged vs slot serving engine: same total KV memory, tok/s +
+#     concurrency + preemption accounting -> BENCH_serving.json.
+# ----------------------------------------------------------------------
+
+
+def bench_serving_paged():
+    from repro.configs.base import get_config
+    from repro.models.api import Model
+    from repro.serving.server import LLMEngine, PagedLLMEngine
+
+    smoke = bool(globals().get("_SMOKE"))
+    out_path = globals().get("_BENCH_OUT") or "BENCH_serving.json"
+    print("\n# paged KV engine vs slot baseline, identical pool memory "
+          f"({'smoke' if smoke else 'full'} config)")
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    slots, cache_max, block_size = 2, 64, 8
+    requests = 6 if smoke else 12
+    prompt_len = 8
+    max_new = 4 if smoke else 8
+    prompts = [np.random.default_rng(i).integers(
+        1, cfg.vocab_size, prompt_len).astype(np.int32)
+        for i in range(requests)]
+
+    def drive(engine):
+        for p in prompts:
+            engine.submit(p, max_new=max_new)
+        t0 = time.time()
+        done, steps, peak = [], 0, 0
+        while not engine.idle:
+            done.extend(engine.step())
+            steps += 1
+            peak = max(peak, len(engine.active))
+        wall = time.time() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        outs = {r.rid: r.out_tokens for r in done}
+        return {"tok_per_s": round(toks / wall, 2), "wall_s": round(wall, 3),
+                "tokens": toks, "steps": steps, "peak_concurrency": peak}, outs
+
+    slot_engine = LLMEngine(model, params, num_slots=slots,
+                            cache_max=cache_max)
+    slot_res, slot_outs = drive(slot_engine)
+
+    # identical KV memory: num_blocks * block_size == slots * cache_max
+    num_blocks = slots * cache_max // block_size
+    paged_engine = PagedLLMEngine(model, params, num_blocks=num_blocks,
+                                  block_size=block_size, max_batch=8,
+                                  max_len=cache_max)
+    paged_res, paged_outs = drive(paged_engine)
+    paged_res["preemptions"] = paged_engine.preemptions
+    paged_res["admissions"] = paged_engine.admissions
+
+    report = {
+        "arch": cfg.name,
+        "config": {"slots": slots, "cache_max": cache_max,
+                   "block_size": block_size, "num_blocks": num_blocks,
+                   "requests": requests, "prompt_len": prompt_len,
+                   "max_new": max_new, "smoke": smoke},
+        "slot": slot_res,
+        "paged": paged_res,
+        "token_identical": slot_outs == paged_outs,
+        "speedup": round(paged_res["tok_per_s"] /
+                         max(slot_res["tok_per_s"], 1e-9), 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("serving_paged.slot.tok_per_s", slot_res["tok_per_s"],
+         f"peak_concurrency {slot_res['peak_concurrency']}")
+    emit("serving_paged.paged.tok_per_s", paged_res["tok_per_s"],
+         f"peak_concurrency {paged_res['peak_concurrency']} "
+         f"preemptions {paged_res['preemptions']}")
+    emit("serving_paged.token_identical", report["token_identical"],
+         "paged outputs must match slot engine exactly")
+    emit("serving_paged.report", out_path, "BENCH_serving.json artifact")
+
+
+# ----------------------------------------------------------------------
 # 8. Roofline report (deliverable g) — regenerated from results/dryrun.
 # ----------------------------------------------------------------------
 
@@ -267,6 +346,7 @@ BENCHES = {
     "serving_opt": bench_serving_optimized,
     "strategies": bench_strategies,
     "llm_engine": bench_llm_engine,
+    "serving_paged": bench_serving_paged,
     "roofline": bench_roofline,
 }
 
@@ -275,7 +355,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced request counts (the CI benchmark lane)")
+    ap.add_argument("--bench-out", default=None,
+                    help="path for BENCH_serving.json (default: cwd)")
     args = ap.parse_args()
+    globals()["_SMOKE"] = args.smoke
+    globals()["_BENCH_OUT"] = args.bench_out
     names = args.only.split(",") if args.only else list(BENCHES)
     t0 = time.time()
     for name in names:

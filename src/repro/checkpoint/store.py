@@ -44,7 +44,7 @@ _NATIVE = {np.dtype(t) for t in
 
 def save(directory: str, tree: Any) -> None:
     os.makedirs(directory, exist_ok=True)
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
     manifest = {"keys": [], "dtypes": {}, "treedef": str(treedef)}
     for path, leaf in flat:
@@ -73,7 +73,7 @@ def restore(directory: str, like: Any) -> Any:
         manifest = json.load(f)
     dtypes = manifest.get("dtypes", {})
     with np.load(os.path.join(directory, "arrays.npz")) as data:
-        flat, treedef = jax.tree.flatten_with_path(like)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         stored = set(data.files)
         wanted = {_path_key(p) for p, _ in flat}
         if stored != wanted:

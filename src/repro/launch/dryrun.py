@@ -86,16 +86,23 @@ def _opt_pspecs(pspecs):
 
 def _mem(compiled) -> Dict[str, float]:
     ma = compiled.memory_analysis()
+    # peak_memory_in_bytes is only reported by newer jaxlibs; fall back
+    # to the args+outputs+temps upper bound when it's absent.
+    peak = getattr(ma, "peak_memory_in_bytes",
+                   ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                   ma.temp_size_in_bytes)
     return {
         "argument_gib": ma.argument_size_in_bytes / 2**30,
         "output_gib": ma.output_size_in_bytes / 2**30,
         "temp_total_gib": ma.temp_size_in_bytes / 2**30,
-        "peak_gib": ma.peak_memory_in_bytes / 2**30,
+        "peak_gib": peak / 2**30,
     }
 
 
 def _cost(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # older jaxlibs: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

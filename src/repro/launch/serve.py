@@ -1,8 +1,13 @@
 """Serving launcher: continuous-batching LLM inference on any assigned
 architecture (reduced variants on the CPU container).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b \
-        --requests 8 --slots 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --engine paged --requests 8 --max-new 16
+
+``--engine paged`` (default for pure-attention stacks) runs the
+block-paged engine with admission-aware scheduling; ``--engine slot``
+runs the fixed-slot baseline.  Queue/pool occupancy gauges are printed
+every ``--stats-every`` steps and at exit.
 """
 from __future__ import annotations
 
@@ -14,18 +19,43 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models.api import Model
-from repro.serving.server import LLMEngine
+from repro.serving.server import LLMEngine, PagedLLMEngine
+
+
+def _fmt_stats(stats: dict) -> str:
+    return (f"[{stats['engine']}] queue={stats['queue_depth']} "
+            f"active={stats['active']} "
+            f"blocks={stats['used_blocks']}/{stats['total_blocks']} "
+            f"occ={stats['pool_occupancy']:.2f} "
+            f"preempt={stats.get('preemptions', 0)}")
+
+
+def build_engine(args, model, params):
+    if args.engine == "paged":
+        return PagedLLMEngine(model, params, num_blocks=args.num_blocks,
+                              block_size=args.block_size,
+                              max_batch=args.max_batch,
+                              max_len=args.cache_max)
+    return LLMEngine(model, params, num_slots=args.slots,
+                     cache_max=args.cache_max)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--engine", choices=("paged", "slot"), default=None,
+                    help="default: paged when the arch supports it")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--num-blocks", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--cache-max", type=int, default=128)
+    ap.add_argument("--cache-max", type=int, default=128,
+                    help="per-request cache strip (slot) / max_len (paged)")
+    ap.add_argument("--stats-every", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -36,9 +66,10 @@ def main():
         raise SystemExit(f"{cfg.name}: serve CLI drives text-only decode; "
                          "use examples/serve_digits.py for the full app")
     model = Model(cfg)
+    if args.engine is None:
+        args.engine = "paged" if model.supports_paged else "slot"
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = LLMEngine(model, params, num_slots=args.slots,
-                       cache_max=args.cache_max)
+    engine = build_engine(args, model, params)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -52,11 +83,14 @@ def main():
     while not engine.idle:
         finished.extend(engine.step(now=time.time() - t0))
         steps += 1
+        if args.stats_every and steps % args.stats_every == 0:
+            print(_fmt_stats(engine.stats()))
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in finished)
     print(f"{len(finished)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s, {steps} engine steps, "
-          f"slots={args.slots})")
+          f"engine={args.engine})")
+    print(_fmt_stats(engine.stats()))
     for r in finished[:3]:
         print(f"  req {r.rid}: {len(r.out_tokens)} tokens "
               f"{r.out_tokens[:8]}...")

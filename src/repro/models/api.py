@@ -148,6 +148,42 @@ class Model:
         logits = unembed_apply(params["embed"], cfg, x)
         return logits, caches
 
+    # ------------------------------------------------------------ paged
+    @property
+    def supports_paged(self) -> bool:
+        """Block-paged decode covers pure-attention decoder-only stacks.
+        SSM/RWKV states are O(1) per request (nothing to page) and the
+        enc-dec/vision paths carry non-token caches — those stay on the
+        slot engine."""
+        cfg = self.cfg
+        return (not cfg.is_encoder_decoder and cfg.frontend == "none"
+                and all(k == "attn" for k in cfg.kinds_for_layers))
+
+    def pool_init(self, num_blocks: int, block_size: int,
+                  dtype: Optional[str] = None):
+        """Concrete block pools for every layer (pos lanes -1).  Block 0
+        is the reserved null block — allocators must never hand it out."""
+        if not self.supports_paged:
+            raise ValueError(f"{self.cfg.name}: paged decode unsupported "
+                             "(needs a pure-attention decoder-only stack)")
+        return tf.stack_pool_init(self.cfg, num_blocks, block_size,
+                                  jnp.dtype(dtype or self.cfg.dtype))
+
+    def decode_step_paged(self, params, pools, block_table, tokens, pos,
+                          active):
+        """Paged one-token step.  tokens (B,1) int32, pos (B,) absolute
+        position, block_table (B, nb) int32, active (B,) bool.
+        -> (logits, new_pools)."""
+        cfg = self.cfg
+        posc = jnp.minimum(pos, cfg.max_position - 1) if (
+            cfg.pos_kind == "learned") else pos
+        x = self._embed_tokens(params, tokens, posc[:, None])
+        x, pools = tf.stack_decode_paged(params["stack"], cfg, x, pools,
+                                         block_table, posc, active)
+        x = norm_apply(params["final_norm"], x, cfg.norm_kind)
+        logits = unembed_apply(params["embed"], cfg, x)
+        return logits, pools
+
     # ------------------------------------------------------------ abstract
     def input_specs(self, shape: InputShape, dtype: Optional[str] = None
                     ) -> Dict[str, Any]:

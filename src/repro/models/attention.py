@@ -351,11 +351,32 @@ def attn_prefill(p, cfg: ModelConfig, x, positions, *, kind: str,
     return y, cache
 
 
+def _decode_attn_read(p, cfg: ModelConfig, q, cache_k, cache_v, kpos, pos,
+                      *, kind: str):
+    """Masked one-token attention over an assembled cache view — the
+    shared read tail of slot (contiguous) and paged (gathered) decode.
+    q (B,1,H,hd), cache_k/v (B,L,KV,hd), kpos (B,L) absolute positions
+    (-1 = invalid lane).  Returns y (B,1,D)."""
+    hd = cfg.resolved_head_dim
+    h = q.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    k_rep = _repeat_kv(cache_k, h, seq_name="kv_len")
+    v_rep = _repeat_kv(cache_v, h, seq_name="kv_len")
+    sc = _scores(q, k_rep, spec=("batch", None, None, "kv_len")) * scale
+    kp = kpos[:, None, None, :]
+    mask = (kp >= 0) & (kp <= pos[:, None, None, None])
+    if kind == "attn_local" and cfg.sliding_window:
+        mask = mask & (pos[:, None, None, None] - kp < cfg.sliding_window)
+    probs = _softmax(sc, mask).astype(cache_v.dtype)
+    out = _attn_out(probs, v_rep)              # (B,1,H,hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "seq", "d_model")
+
+
 def attn_decode(p, cfg: ModelConfig, x, cache, pos, *, kind: str):
     """One-token decode.  x (B,1,D), pos (B,) absolute position of the new
     token.  Returns (y (B,1,D), new_cache)."""
     rope = cfg.pos_kind == "rope"
-    hd = cfg.resolved_head_dim
     q, k_new, v_new = _project_qkv(p, cfg, x, pos[:, None], rope, kind)
     clen = cache["k"].shape[1]
     slot = (pos % clen).astype(jnp.int32)
@@ -382,21 +403,91 @@ def attn_decode(p, cfg: ModelConfig, x, cache, pos, *, kind: str):
     cache_pos = jax.vmap(write)(cache["pos"], pos[:, None], slot)
     new_cache["pos"] = cache_pos
 
-    scale = 1.0 / math.sqrt(hd)
-    h = q.shape[2]
-    k_rep = _repeat_kv(cache_k, h, seq_name="kv_len")
-    v_rep = _repeat_kv(cache_v, h, seq_name="kv_len")
-    sc = _scores(q, k_rep, spec=("batch", None, None, "kv_len")) * scale
-    kp = cache_pos[:, None, None, :]
-    mask = (kp >= 0) & (kp <= pos[:, None, None, None])
-    if kind == "attn_local" and cfg.sliding_window:
-        mask = mask & (pos[:, None, None, None] - kp < cfg.sliding_window)
-    probs = _softmax(sc, mask).astype(cache_v.dtype)
-    out = _attn_out(probs, v_rep)                  # (B,1,H,hd)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = _decode_attn_read(p, cfg, q, cache_k, cache_v, cache_pos, pos,
+                          kind=kind)
     new_cache = {kk: shard(vv, *CACHE_LOGICAL[kk])
                  for kk, vv in new_cache.items()}
-    return shard(y, "batch", "seq", "d_model"), new_cache
+    return y, new_cache
+
+
+# ------------------------------------------------------------- paged cache
+# Block-paged decode (the vLLM mechanism, XLA-shaped): one preallocated
+# pool of fixed-size token blocks per layer, shared by every request.  A
+# request's cache is a *block table* — a row of physical block ids — so
+# short requests stop paying for ``cache_max``-length strips and the
+# engine admits as many requests as free blocks allow.
+#
+# The pool for one layer reuses the batched-cache layout with
+# ``batch -> num_blocks`` and ``kv_len -> block_size``:
+#     {"k": (NB, bs, KV, hd), "v": (NB, bs, KV, hd), "pos": (NB, bs)}
+# Physical block 0 is reserved as a permanently-invalid NULL block: its
+# ``pos`` lanes stay -1 forever and block tables pad with 0, so gathers
+# through padding can never win the attention mask.
+
+
+def paged_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype):
+    """Concrete zero pool for one attention layer (pos lanes -1)."""
+    return init_cache(cfg, "attn", num_blocks, block_size, dtype)
+
+
+def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
+                      *, kind: str):
+    """One-token decode against a block-paged KV pool.
+
+    x (B,1,D); ``pool`` is the *shared* layer pool (leaves lead with the
+    physical-block axis); ``block_table`` (B, nb) int32 maps each
+    request's logical blocks to physical ids (0-padded); ``pos`` (B,)
+    absolute position of the new token; ``active`` (B,) bool — inactive
+    rows write ``pos = -1`` into the null block so their lanes never
+    validate.  Returns (y (B,1,D), new_pool).
+    """
+    rope = cfg.pos_kind == "rope"
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos[:, None], rope, kind)
+    bs = pool["pos"].shape[1]
+    b, nb = block_table.shape
+
+    # scatter the new token's kv into (physical block, in-block offset).
+    # Active rows own disjoint blocks so their writes never collide;
+    # inactive rows all target the null block and write pos=-1 (their k/v
+    # payloads race, but a -1 lane is masked regardless of payload).
+    logical = (pos // bs).astype(jnp.int32)
+    phys = jnp.take_along_axis(block_table, logical[:, None], axis=1)[:, 0]
+    off = (pos % bs).astype(jnp.int32)
+    pos_val = jnp.where(active, pos.astype(jnp.int32), -1)
+
+    new_pool = {}
+    if cfg.kv_cache_quant:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        new_pool["k"] = pool["k"].at[phys, off].set(kq[:, 0])
+        new_pool["v"] = pool["v"].at[phys, off].set(vq[:, 0])
+        new_pool["k_s"] = pool["k_s"].at[phys, off].set(ks[:, 0])
+        new_pool["v_s"] = pool["v_s"].at[phys, off].set(vs[:, 0])
+    else:
+        new_pool["k"] = pool["k"].at[phys, off].set(
+            k_new[:, 0].astype(pool["k"].dtype))
+        new_pool["v"] = pool["v"].at[phys, off].set(
+            v_new[:, 0].astype(pool["v"].dtype))
+    new_pool["pos"] = pool["pos"].at[phys, off].set(pos_val)
+
+    # gather-based read: (B, nb, bs, ...) -> (B, nb*bs, ...) logical view
+    kv = cfg.num_kv_heads
+    if cfg.kv_cache_quant:
+        cache_k = _dequantize_kv(new_pool["k"][block_table],
+                                 new_pool["k_s"][block_table], k_new.dtype)
+        cache_v = _dequantize_kv(new_pool["v"][block_table],
+                                 new_pool["v_s"][block_table], v_new.dtype)
+    else:
+        cache_k = new_pool["k"][block_table]
+        cache_v = new_pool["v"][block_table]
+    cache_k = cache_k.reshape(b, nb * bs, kv, hd)
+    cache_v = cache_v.reshape(b, nb * bs, kv, hd)
+    kpos = new_pool["pos"][block_table].reshape(b, nb * bs)
+
+    y = _decode_attn_read(p, cfg, q, cache_k, cache_v, kpos, pos, kind=kind)
+    return y, new_pool
 
 
 # ------------------------------------------------------------- cross-attn

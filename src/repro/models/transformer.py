@@ -293,6 +293,82 @@ def stack_decode(params, cfg: ModelConfig, x, caches, pos):
     return x, {"periods": new_period_caches, "rem": new_rem}
 
 
+def block_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
+                       *, kind: str, moe: bool):
+    """One-token step against a block-paged pool (attention layers only —
+    SSM/RWKV states are O(1) per request, nothing to page)."""
+    if kind not in ("attn", "attn_local"):
+        raise ValueError(f"paged decode: unsupported layer kind {kind!r}")
+    h = norm_apply(p["norm1"], x, cfg.norm_kind)
+    y, pool = attn.attn_decode_paged(p["mix"], cfg, h, pool, block_table,
+                                     pos, active, kind=kind)
+    x = x + y
+    h = norm_apply(p["norm2"], x, cfg.norm_kind)
+    y, _ = _ffn(p, cfg, h, moe)
+    return x + y, pool
+
+
+def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
+                       active):
+    """-> (x, new_pools).  Same period scan as ``stack_decode``; the block
+    table is shared by every layer (one allocation per request covers the
+    whole stack — each layer owns its own physical pool, indexed by the
+    same table)."""
+    p, n_per, n_rem = layout(cfg)
+
+    def body(x, xs):
+        period_params, period_pools = xs
+        new = {}
+        for j in range(p):
+            kind, moe = slot_sig(cfg, j)
+            x, c = block_decode_paged(period_params[f"slot{j}"], cfg, x,
+                                      period_pools[f"slot{j}"], block_table,
+                                      pos, active, kind=kind, moe=moe)
+            new[f"slot{j}"] = c
+        return x, new
+
+    new_period_pools = {}
+    if n_per:
+        x, new_period_pools = jax.lax.scan(
+            body, x, (params["periods"], pools["periods"]))
+    new_rem = {}
+    for j in range(n_rem):
+        kind, moe = slot_sig(cfg, n_per * p + j)
+        x, c = block_decode_paged(params["rem"][f"layer{j}"], cfg, x,
+                                  pools["rem"][f"layer{j}"], block_table,
+                                  pos, active, kind=kind, moe=moe)
+        new_rem[f"layer{j}"] = c
+    return x, {"periods": new_period_pools, "rem": new_rem}
+
+
+def stack_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype):
+    """Concrete block pools for the whole stack, mirroring the cache
+    layout (period-stacked leaves lead with ``n_periods``).  Pools are
+    built at full ``block_size`` for every layer — sliding-window layers
+    keep correctness through the window mask, not a ring clamp (rings
+    don't compose with block reuse)."""
+    p, n_per, n_rem = layout(cfg)
+
+    def one(kind):
+        if kind not in ("attn", "attn_local"):
+            raise ValueError(f"paged pools: unsupported layer kind {kind!r}")
+        return attn.paged_pool_init(cfg, num_blocks, block_size, dtype)
+
+    def stacked(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_per,) + a.shape), tree)
+
+    periods = {
+        f"slot{j}": stacked(one(slot_sig(cfg, j)[0])) for j in range(p)
+    } if n_per else {}
+    rem = {
+        f"layer{j}": one(slot_sig(cfg, n_per * p + j)[0])
+        for j in range(n_rem)
+    }
+    return {"periods": periods, "rem": rem}
+
+
 def stack_cache_abstract(cfg: ModelConfig, batch: int, cache_max: int, dtype):
     p, n_per, n_rem = layout(cfg)
 

@@ -79,6 +79,26 @@ class LoadBalancer:
         r.in_flight -= 1
         r.served += 1
 
+    def attach_engine_stats(self, fn) -> None:
+        """Register a gauge source (e.g. ``PagedLLMEngine.stats``) so
+        balancer snapshots carry backend queue/pool occupancy — the
+        signal an occupancy-aware dispatch policy needs."""
+        self._engine_stats = fn
+
+    def stats(self) -> dict:
+        """Dispatch counters + per-replica load, plus the attached
+        engine's queue/pool occupancy gauges when present."""
+        out = {
+            "dispatched": self.dispatched,
+            "rejected": self.rejected,
+            "imbalance": round(self.imbalance(), 4),
+            "replica_loads": [r.load for r in self.replicas],
+        }
+        fn = getattr(self, "_engine_stats", None)
+        if fn is not None:
+            out["engine"] = dict(fn())
+        return out
+
     def max_load(self) -> int:
         return max(r.load for r in self.replicas)
 

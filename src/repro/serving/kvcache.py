@@ -84,6 +84,102 @@ def _is_logical(x) -> bool:
         isinstance(e, (str, type(None))) for e in x)
 
 
+# ---------------------------------------------------------------- paged
+# Block-paged pool management (the vLLM mechanism, XLA-shaped).  The
+# model side lives in models/attention.py: one preallocated pool of
+# fixed-size token blocks per layer, gather-based reads through a
+# per-request block table.  This side owns the physical-block free list
+# and the host<->pool splices.
+
+
+class BlockAllocator:
+    """Free-list over physical KV blocks.  Block 0 is the reserved NULL
+    block (block tables pad with it; its pos lanes stay -1 forever), so
+    allocatable ids are ``1..num_blocks-1``."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 2, "need >= 1 allocatable block + null block"
+        assert block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(1, num_blocks))
+        self._live: set = set()
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cache entries (>= 1)."""
+        return max(1, -(-n_tokens // self.block_size))
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None (all-or-nothing) if the pool can't
+        cover the request."""
+        if n > len(self._free):
+            return None
+        blocks = self._free[:n]
+        del self._free[:n]
+        self._live.update(blocks)
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b in self._live, f"double free of block {b}"
+            self._live.discard(b)
+        self._free.extend(blocks)
+        self._free.sort()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    @property
+    def num_usable(self) -> int:
+        return self.num_blocks - 1          # null block is never usable
+
+
+def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
+                         block_size: int) -> Any:
+    """Splice a (B=1) prefill cache into the request's physical blocks.
+
+    ``single_cache`` must come from ``Model.prefill`` with
+    ``cache_max == len(block_ids) * block_size`` so every leaf's kv_len
+    axis splits exactly into the allocated blocks; unfilled lanes carry
+    ``pos = -1`` from ``init_cache`` and overwrite any stale lanes left
+    by the blocks' previous owner.
+    """
+    ids = jnp.asarray(block_ids, jnp.int32)
+
+    def write(pool_leaf, cache_leaf):
+        ax = _batch_axis(pool_leaf.shape, cache_leaf.shape)
+        small = jnp.squeeze(cache_leaf, ax)        # seq axis now at ``ax``
+        shp = small.shape
+        nb = shp[ax] // block_size
+        assert nb * block_size == shp[ax], (shp, ax, block_size)
+        small = small.reshape(shp[:ax] + (nb, block_size) + shp[ax + 1:])
+        idx = (slice(None),) * ax + (ids,)
+        return pool_leaf.at[idx].set(small.astype(pool_leaf.dtype))
+
+    return jax.tree.map(write, pools, single_cache)
+
+
+def invalidate_blocks(pools: Any, block_ids: List[int]) -> Any:
+    """Kill freed blocks' attention validity (pos lanes -> -1) so a block
+    handed to a *growing* request mid-decode can't leak its previous
+    owner's positions (prefill splices overwrite whole blocks; growth
+    writes one lane at a time)."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (v.at[..., ids, :].set(-1) if k == "pos" else walk(v))
+                    for k, v in node.items()}
+        return node
+
+    return walk(pools)
+
+
 def invalidate_slot(batched_cache: Any, cache_logical: Any, slot: int) -> Any:
     """Kill a slot's attention validity: position lanes -> -1, states -> 0.
 

@@ -12,8 +12,10 @@ Request outcomes mirror the paper's §III failure modes: fast 429 when the
 balancer is saturated, 503 when a broker partition is full, 504 when the
 result doesn't appear before the client timeout.
 
-``LLMEngine`` is the production inference path for the architecture pool:
-slot-based continuous batching over ``Model.prefill``/``decode_step``.
+``LLMEngine`` is the slot-based continuous-batching baseline;
+``PagedLLMEngine`` is the production path: block-paged KV pool +
+admission-aware scheduling with preempt-and-requeue (see the class
+docstring for the policy).
 """
 from __future__ import annotations
 
@@ -27,7 +29,9 @@ import numpy as np
 
 from repro.serving.balancer import LoadBalancer, Overloaded
 from repro.serving.broker import Broker, PartitionFull
-from repro.serving.kvcache import SlotManager, write_slot
+from repro.serving.kvcache import (BlockAllocator, SlotManager,
+                                   invalidate_blocks, write_prefill_blocks,
+                                   write_slot)
 from repro.serving.sim import Clock, QueuedResource
 from repro.serving.store import ResultStore
 
@@ -287,4 +291,256 @@ class LLMEngine:
                 del self.active[s]
                 self.slots.free(s)
                 self.pos[s] = -1
+        return done
+
+    def stats(self) -> Dict[str, float]:
+        """Queue/capacity gauges, shape-compatible with the paged engine's
+        (slots stand in for blocks: one slot == cache_max tokens)."""
+        live = len(self.active)
+        return {
+            "engine": "slot",
+            "queue_depth": len(self.queue),
+            "active": live,
+            "free_blocks": self.slots.num_free,
+            "used_blocks": live,
+            "total_blocks": self.num_slots,
+            "pool_occupancy": live / max(self.num_slots, 1),
+            "preemptions": 0,
+            "admissions": self._rid - len(self.queue),
+        }
+
+
+# ---------------------------------------------------------------- paged LLM
+
+
+class PagedLLMEngine:
+    """Continuous batching over a block-paged KV pool with an
+    admission-aware scheduler.
+
+    Versus ``LLMEngine`` (one contiguous ``cache_max`` strip per slot):
+
+      * memory is a shared pool of ``num_blocks`` x ``block_size``-token
+        blocks — a request holds exactly ``ceil(len/block_size)`` blocks,
+        so short requests don't reserve ``cache_max`` tokens and
+        concurrency is bounded by *live tokens*, not slot count;
+      * admission: a queued request is admitted while the pool can cover
+        its prefill blocks AND the running batch's next decode step
+        (each active request may need one growth block when it crosses a
+        block boundary) — backpressure instead of OOM;
+      * on pool exhaustion mid-decode the *youngest* active request is
+        preempted: its blocks are freed and it is requeued at the front,
+        to resume later by re-prefilling prompt + generated tokens
+        (greedy decode makes the resumed continuation token-identical).
+
+    Occupancy/queue gauges are exposed via ``stats()`` for the balancer
+    and the serve CLI.
+
+    Known trade-off: prefill is jitted per (sequence length, cache_max)
+    pair, so preempt-resume retraces per distinct resume length —
+    length-bucketed prefill needs a padding mask in the model's prefill
+    path (ROADMAP open item).
+    """
+
+    def __init__(self, model, params, num_blocks: int = 32,
+                 block_size: int = 16, max_batch: int = 8,
+                 max_len: int = 256, eos_id: Optional[int] = None):
+        if not model.supports_paged:
+            raise ValueError(f"{model.cfg.name}: paged engine needs a "
+                             "pure-attention decoder-only stack")
+        self.model = model
+        self.params = params
+        self.block_size = block_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.pools = model.pool_init(num_blocks, block_size)
+        self.nb_max = -(-max_len // block_size)
+        self.block_table = np.zeros((max_batch, self.nb_max), np.int32)
+        self.pos = np.zeros((max_batch,), np.int64)
+        self.active: Dict[int, GenRequest] = {}      # row -> request
+        self.row_blocks: Dict[int, List[int]] = {}   # row -> physical blocks
+        self.queue: List[GenRequest] = []
+        self._rid = 0
+        self.preemptions = 0
+        self.admissions = 0
+        self.finished_count = 0
+        self.peak_active = 0
+
+        self._prefill = jax.jit(
+            lambda p, b, cm: model.prefill(p, b, cache_max=cm),
+            static_argnums=2)
+        self._decode = jax.jit(model.decode_step_paged)
+
+    # ------------------------------------------------------------ client
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               now: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(f"prompt({len(prompt)}) + max_new({max_new}) "
+                             f"exceeds max_len={self.max_len}")
+        # a request that can never hold its final KV footprint would sit
+        # at the queue head forever (admission can never cover it) — fail
+        # at submit, not as a silent stall.
+        worst = self.allocator.blocks_for(len(prompt) + max_new - 1)
+        if worst > self.allocator.num_usable:
+            raise ValueError(
+                f"request needs {worst} blocks at completion but the pool "
+                f"only has {self.allocator.num_usable}: pool too small")
+        self._rid += 1
+        self.queue.append(GenRequest(self._rid, prompt, max_new,
+                                     submitted=now))
+        return self._rid
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def stats(self) -> Dict[str, float]:
+        alloc = self.allocator
+        return {
+            "engine": "paged",
+            "queue_depth": len(self.queue),
+            "active": len(self.active),
+            "free_blocks": alloc.num_free,
+            "used_blocks": alloc.num_live,
+            "total_blocks": alloc.num_usable,
+            "pool_occupancy": alloc.num_live / max(alloc.num_usable, 1),
+            "preemptions": self.preemptions,
+            "admissions": self.admissions,
+            "peak_active": self.peak_active,
+        }
+
+    # ------------------------------------------------------------ sched
+    def _free_row(self) -> Optional[int]:
+        for r in range(self.max_batch):
+            if r not in self.active:
+                return r
+        return None
+
+    def _next_step_block_need(self) -> int:
+        """Blocks the running batch needs for its next decode step (a
+        request crossing a block boundary needs one growth block)."""
+        need = 0
+        for row in self.active:
+            if int(self.pos[row]) // self.block_size >= \
+                    len(self.row_blocks[row]):
+                need += 1
+        return need
+
+    def _admission_ok(self, req: GenRequest) -> bool:
+        seq_len = len(req.prompt) + len(req.out_tokens)
+        need = self.allocator.blocks_for(seq_len)
+        if seq_len % self.block_size == 0:
+            need += 1      # its own first decode step crosses a boundary
+        free_after = self.allocator.num_free - need
+        if free_after < 0:
+            return not self.active            # always keep making progress
+        if not self.active:
+            return True
+        return free_after >= self._next_step_block_need()
+
+    def step(self, now: float = 0.0) -> List[GenRequest]:
+        """Admit one queued request (prefill) OR advance the whole batch
+        one token.  Returns finished requests."""
+        if self.queue and self._free_row() is not None and \
+                self._admission_ok(self.queue[0]):
+            return self._admit(now)
+        if self.active:
+            return self._decode_all(now)
+        return []
+
+    def _admit(self, now: float) -> List[GenRequest]:
+        req = self.queue.pop(0)
+        # resume-aware: a preempted request re-prefills its prompt plus
+        # everything it already generated (same greedy continuation).
+        seq = np.concatenate([req.prompt,
+                              np.asarray(req.out_tokens, np.int32)]) \
+            if req.out_tokens else req.prompt
+        nb = self.allocator.blocks_for(len(seq))
+        blocks = self.allocator.alloc(nb)
+        assert blocks is not None, "admission check guarantees capacity"
+        row = self._free_row()
+        logits, cache1 = self._prefill(self.params, {"tokens": seq[None, :]},
+                                       nb * self.block_size)
+        self.pools = write_prefill_blocks(self.pools, cache1, blocks,
+                                          self.block_size)
+        self.block_table[row, :] = 0
+        self.block_table[row, :nb] = blocks
+        self.pos[row] = len(seq)
+        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        req.out_tokens.append(tok)
+        if req.first_token_at is None:
+            req.first_token_at = now
+        self.active[row] = req
+        self.row_blocks[row] = list(blocks)
+        self.admissions += 1
+        self.peak_active = max(self.peak_active, len(self.active))
+        return self._collect(now)
+
+    def _preempt_youngest(self) -> None:
+        row = max(self.active, key=lambda r: self.active[r].rid)
+        req = self.active.pop(row)
+        blocks = self.row_blocks.pop(row)
+        self.pools = invalidate_blocks(self.pools, blocks)
+        self.allocator.free(blocks)
+        self.block_table[row, :] = 0
+        self.pos[row] = 0
+        self.queue.insert(0, req)             # resumes as soon as blocks free
+        self.preemptions += 1
+
+    def _decode_all(self, now: float) -> List[GenRequest]:
+        # grow block tables for the next write, oldest request first;
+        # preempt the youngest instead of failing when the pool is dry.
+        for row in sorted(self.active, key=lambda r: self.active[r].rid):
+            while row in self.active and \
+                    int(self.pos[row]) // self.block_size >= \
+                    len(self.row_blocks[row]):
+                got = self.allocator.alloc(1)
+                if got is not None:
+                    self.row_blocks[row].append(got[0])
+                    self.block_table[row, len(self.row_blocks[row]) - 1] = \
+                        got[0]
+                elif len(self.active) == 1:
+                    raise RuntimeError(
+                        "KV pool too small for a single request: "
+                        f"{self.allocator.num_usable} usable blocks")
+                else:
+                    self._preempt_youngest()
+        if not self.active:
+            return []
+
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        active_mask = np.zeros((self.max_batch,), bool)
+        for row, req in self.active.items():
+            tokens[row, 0] = req.out_tokens[-1]
+            pos[row] = self.pos[row]
+            active_mask[row] = True
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(self.block_table),
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active_mask))
+        arr = np.asarray(logits)
+        for row, req in self.active.items():
+            req.out_tokens.append(int(np.argmax(arr[row, 0])))
+            self.pos[row] += 1
+        return self._collect(now)
+
+    def _collect(self, now: float) -> List[GenRequest]:
+        done = []
+        for row in list(self.active):
+            req = self.active[row]
+            hit_eos = self.eos_id is not None and req.out_tokens and \
+                req.out_tokens[-1] == self.eos_id
+            if len(req.out_tokens) >= req.max_new or hit_eos or \
+                    int(self.pos[row]) + 1 >= self.max_len:
+                req.finished_at = now
+                done.append(req)
+                del self.active[row]
+                blocks = self.row_blocks.pop(row)
+                self.pools = invalidate_blocks(self.pools, blocks)
+                self.allocator.free(blocks)
+                self.block_table[row, :] = 0
+                self.pos[row] = 0
+                self.finished_count += 1
         return done

@@ -1,0 +1,108 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+CI installs the real hypothesis (requirements-dev.txt); hermetic
+containers that only carry the runtime deps still need the suite to
+collect and run.  ``conftest.py`` registers this module under the names
+``hypothesis`` / ``hypothesis.strategies`` when the real package is
+missing, so test files keep the canonical
+
+    from hypothesis import given, settings, strategies as st
+
+import.  The fallback replays each property over a fixed number of
+seeded pseudo-random examples — no shrinking, no database, but the same
+invariants get exercised on every run.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+_FALLBACK_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example_from(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(**_kwargs):
+    """No-op decorator factory (max_examples/deadline have no meaning
+    for the fixed-count fallback runner)."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — the runner must expose a zero-arg
+        # signature or pytest would treat the property's parameters as
+        # fixtures.  Seed from the (stable) test name so failures
+        # reproduce across runs.
+        def runner():
+            seed = int(np.frombuffer(
+                fn.__name__.encode()[:8].ljust(8, b"\0"), np.uint32)[0])
+            rng = np.random.default_rng(seed)
+            for _ in range(_FALLBACK_EXAMPLES):
+                drawn = [s.example_from(rng) for s in strategies]
+                fn(*drawn)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco
+
+
+def install_if_missing() -> bool:
+    """Register this module as ``hypothesis`` unless the real one exists.
+    Returns True when the fallback was installed."""
+    try:
+        import hypothesis  # noqa: F401
+
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return True

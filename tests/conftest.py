@@ -2,6 +2,14 @@
 (single) CPU device; only launch/dryrun.py forces 512 host devices."""
 import dataclasses
 
+# Must run before any test module does `from hypothesis import ...`:
+# hermetic containers carry only the runtime deps, so a deterministic
+# fallback stands in for hypothesis when it isn't installed (CI installs
+# the real one via requirements-dev.txt).
+import _hypothesis_fallback
+
+_hypothesis_fallback.install_if_missing()
+
 import jax
 import pytest
 

@@ -10,6 +10,8 @@ from repro.kernels.conv2d import conv2d
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
+pytestmark = pytest.mark.kernels
+
 KEY = jax.random.PRNGKey(0)
 KS = jax.random.split(KEY, 8)
 

@@ -1,0 +1,254 @@
+"""Block-paged KV cache + admission-aware scheduler tests.
+
+Invariant layers, bottom-up: allocator free-list accounting, pool
+splice/invalidate correctness, then the engine-level acceptance
+criteria — with the pool sized to the slot engine's total KV memory the
+paged engine must (a) sustain strictly more concurrent requests than
+``num_slots`` and (b) stay token-identical, including across
+preempt-and-requeue round-trips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_cfg
+from repro.models.api import Model
+from repro.serving.kvcache import (BlockAllocator, invalidate_blocks,
+                                   write_prefill_blocks)
+from repro.serving.server import LLMEngine, PagedLLMEngine
+
+
+# ------------------------------------------------------------ allocator
+
+
+def test_allocator_never_hands_out_null_block():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    got = a.alloc(7)
+    assert got is not None and 0 not in got
+    assert a.num_free == 0
+    assert a.alloc(1) is None                  # exhausted, all-or-nothing
+
+
+def test_allocator_all_or_nothing_and_reuse():
+    a = BlockAllocator(num_blocks=6, block_size=4)
+    first = a.alloc(3)
+    assert a.alloc(3) is None                  # only 2 left: no partial grant
+    assert a.num_free == 2
+    a.free(first)
+    assert a.num_free == 5
+    again = a.alloc(5)
+    assert sorted(again) == sorted(set(again)) # no duplicate grants
+    assert set(first) <= set(again)            # freed blocks are reused
+
+
+def test_allocator_blocks_for():
+    a = BlockAllocator(num_blocks=4, block_size=8)
+    assert a.blocks_for(0) == 1                # a live request holds >=1
+    assert a.blocks_for(8) == 1
+    assert a.blocks_for(9) == 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 4), min_size=1, max_size=60),
+       st.integers(2, 12))
+def test_allocator_accounting_property(ops, num_blocks):
+    """free + live == usable at every step; grants are disjoint; a grant
+    never exceeds what the free list can cover."""
+    a = BlockAllocator(num_blocks=num_blocks, block_size=4)
+    held = []
+    for op in ops:
+        if op <= 2:                            # alloc 1..3 blocks
+            got = a.alloc(op + 1)
+            if got is not None:
+                held.append(got)
+        elif held:
+            a.free(held.pop())
+        live = set()
+        for blocks in held:
+            assert live.isdisjoint(blocks)
+            live.update(blocks)
+        assert 0 not in live
+        assert a.num_live == len(live)
+        assert a.num_free + a.num_live == a.num_usable
+
+
+# ------------------------------------------------------------ pool splices
+
+
+@pytest.fixture(scope="module")
+def qwen_model(rng_key):
+    cfg = reduced_cfg("qwen3-0.6b")
+    model = Model(cfg)
+    return model, model.init(rng_key)
+
+
+def _pos_leaves(pools):
+    out = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "pos":
+                    out.append(v)
+                else:
+                    walk(v)
+
+    walk(pools)
+    return out
+
+
+def test_pool_init_all_invalid(qwen_model):
+    model, _ = qwen_model
+    pools = model.pool_init(num_blocks=4, block_size=8)
+    for leaf in _pos_leaves(pools):
+        assert int(jnp.max(leaf)) == -1
+
+
+def test_prefill_splice_and_invalidate(qwen_model):
+    """Prefill entries land in the request's blocks at the right lanes;
+    invalidate kills exactly those blocks' validity."""
+    model, params = qwen_model
+    bs = 8
+    pools = model.pool_init(num_blocks=6, block_size=bs)
+    prompt = np.arange(1, 12, dtype=np.int32)       # 11 tokens -> 2 blocks
+    _, cache1 = model.prefill(params, {"tokens": prompt[None]},
+                              cache_max=2 * bs)
+    blocks = [3, 5]
+    pools = write_prefill_blocks(pools, cache1, blocks, bs)
+    for leaf in _pos_leaves(pools):                 # (n_per, NB, bs)
+        got = np.asarray(leaf)
+        for layer in range(got.shape[0]):
+            flat = np.concatenate([got[layer, 3], got[layer, 5]])
+            np.testing.assert_array_equal(
+                flat, list(range(11)) + [-1] * 5)
+            # untouched blocks (incl. null block 0) stay invalid
+            assert got[layer, [0, 1, 2, 4]].max() == -1
+    pools = invalidate_blocks(pools, blocks)
+    for leaf in _pos_leaves(pools):
+        assert int(jnp.max(leaf)) == -1
+
+
+# ------------------------------------------------------------ engine
+
+
+def _drain(engine, max_steps=600):
+    outs, peak = {}, 0
+    for _ in range(max_steps):
+        for r in engine.step():
+            outs[r.rid] = list(r.out_tokens)
+        peak = max(peak, len(engine.active))
+        if engine.idle:
+            break
+    assert engine.idle
+    return outs, peak
+
+
+def test_paged_matches_slot_engine_with_same_pool_memory(qwen_model):
+    """Acceptance: pool sized to the seed engine's total KV memory
+    (num_slots * cache_max tokens) -> strictly more concurrency than
+    num_slots, token-identical outputs."""
+    model, params = qwen_model
+    cfg = model.cfg
+    num_slots, cache_max, bs = 2, 64, 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(5)]
+
+    slot = LLMEngine(model, params, num_slots=num_slots, cache_max=cache_max)
+    for p in prompts:
+        slot.submit(p, max_new=4)
+    slot_outs, slot_peak = _drain(slot)
+
+    paged = PagedLLMEngine(model, params,
+                           num_blocks=num_slots * cache_max // bs,
+                           block_size=bs, max_batch=8, max_len=cache_max)
+    for p in prompts:
+        paged.submit(p, max_new=4)
+    paged_outs, paged_peak = _drain(paged)
+
+    assert slot_peak <= num_slots
+    assert paged_peak > num_slots              # same memory, more requests
+    assert paged.peak_active == paged_peak
+    assert paged_outs == slot_outs             # token-identical
+    assert paged.allocator.num_live == 0       # everything returned
+
+
+def test_paged_preemption_round_trip(qwen_model):
+    """A pool too small for the full batch forces preempt-and-requeue;
+    the preempted requests must still finish with the tokens a generous
+    pool produces."""
+    model, params = qwen_model
+    cfg = model.cfg
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(4)]
+
+    roomy = PagedLLMEngine(model, params, num_blocks=32, block_size=4,
+                           max_batch=8, max_len=64)
+    for p in prompts:
+        roomy.submit(p, max_new=12)
+    ref_outs, _ = _drain(roomy)
+    assert roomy.preemptions == 0
+
+    # 9 usable blocks of 4: all 4 admits fit (2 blocks each = 8), first
+    # growth block exhausts the pool -> youngest gets evicted.
+    tight = PagedLLMEngine(model, params, num_blocks=10, block_size=4,
+                           max_batch=8, max_len=64)
+    for p in prompts:
+        tight.submit(p, max_new=12)
+    tight_outs, _ = _drain(tight, max_steps=2000)
+    assert tight.preemptions > 0
+    assert tight_outs == ref_outs
+    assert tight.allocator.num_live == 0
+
+
+def test_paged_rejects_request_that_can_never_finish(qwen_model):
+    """A request whose final KV footprint exceeds the whole pool must be
+    rejected at submit — otherwise it would sit at the queue head forever
+    (admission can never cover it) and step() would stall silently."""
+    model, params = qwen_model
+    engine = PagedLLMEngine(model, params, num_blocks=3, block_size=4,
+                            max_batch=4, max_len=64)
+    with pytest.raises(ValueError, match="pool too small"):
+        engine.submit(np.arange(1, 8, dtype=np.int32), max_new=32)
+    # largest request that does fit completes without deadlock
+    engine.submit(np.arange(1, 5, dtype=np.int32), max_new=5)
+    outs, _ = _drain(engine, max_steps=50)
+    assert len(outs) == 1 and len(outs[1]) == 5
+
+
+def test_paged_rejects_oversized_and_unsupported(qwen_model):
+    model, params = qwen_model
+    engine = PagedLLMEngine(model, params, num_blocks=8, block_size=4,
+                            max_batch=2, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.submit(np.arange(1, 14, dtype=np.int32), max_new=8)
+    hybrid = Model(reduced_cfg("jamba-1.5-large-398b"))
+    assert not hybrid.supports_paged
+    with pytest.raises(ValueError, match="pure-attention"):
+        PagedLLMEngine(hybrid, params)
+
+
+def test_engine_stats_and_balancer_report(qwen_model):
+    from repro.serving.balancer import LoadBalancer
+
+    model, params = qwen_model
+    engine = PagedLLMEngine(model, params, num_blocks=16, block_size=8,
+                            max_batch=4, max_len=64)
+    engine.submit(np.arange(1, 9, dtype=np.int32), max_new=4)
+    engine.step()                              # admit -> blocks in use
+    s = engine.stats()
+    assert s["engine"] == "paged" and s["active"] == 1
+    assert s["used_blocks"] == 1 and 0 < s["pool_occupancy"] < 1
+
+    lb = LoadBalancer(num_replicas=2)
+    lb.attach_engine_stats(engine.stats)
+    snap = lb.stats()
+    assert snap["engine"]["used_blocks"] == 1
+    assert snap["replica_loads"] == [0, 0]
+
+    slot = LLMEngine(model, params, num_slots=2, cache_max=32)
+    s2 = slot.stats()
+    assert s2["engine"] == "slot" and s2["total_blocks"] == 2

@@ -112,7 +112,9 @@ def test_recurrence_analytic_vs_unrolled():
     args = (jnp.ones((b, s, 1)), jnp.ones((b, s, n)), jnp.ones((b, s, n)),
             jnp.ones((b, s, di)))
     compiled = jax.jit(unrolled).lower(*args).compile()
-    hlo_flops = float(compiled.cost_analysis()["flops"])
+    from repro.launch.dryrun import _cost
+
+    hlo_flops = _cost(compiled)["flops"]
     analytic, _ = ssm_mod.recurrence_cost(cfg, b, s)
     assert analytic == pytest.approx(hlo_flops, rel=2.0), \
         (analytic, hlo_flops)
