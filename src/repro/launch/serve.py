@@ -6,8 +6,10 @@ architecture (reduced variants on the CPU container).
 
 ``--engine paged`` (default for pure-attention stacks) runs the
 block-paged engine with admission-aware scheduling; ``--engine slot``
-runs the fixed-slot baseline.  Queue/pool occupancy gauges are printed
-every ``--stats-every`` steps and at exit.
+runs the fixed-slot baseline.  ``--prefix-cache on`` (the default)
+shares previously computed prompt-prefix blocks across requests via the
+radix tree in ``serving/prefix_cache.py``.  Queue/pool/prefix-cache
+gauges are printed every ``--stats-every`` steps and at exit.
 """
 from __future__ import annotations
 
@@ -23,11 +25,22 @@ from repro.serving.server import LLMEngine, PagedLLMEngine
 
 
 def _fmt_stats(stats: dict) -> str:
-    return (f"[{stats['engine']}] queue={stats['queue_depth']} "
-            f"active={stats['active']} "
-            f"blocks={stats['used_blocks']}/{stats['total_blocks']} "
-            f"occ={stats['pool_occupancy']:.2f} "
-            f"preempt={stats.get('preemptions', 0)}")
+    """Render the stats-schema gauges (see serving/server.py).  Every
+    key goes through ``.get()`` — stats dicts from older engines or
+    persisted snapshots may omit newer gauges."""
+    line = (f"[{stats.get('engine', '?')}] "
+            f"queue={stats.get('queue_depth', 0)} "
+            f"active={stats.get('active', 0)} "
+            f"blocks={stats.get('used_blocks', 0)}"
+            f"/{stats.get('total_blocks', 0)} "
+            f"occ={stats.get('pool_occupancy', 0.0):.2f} "
+            f"preempt={stats.get('preemptions', 0)} "
+            f"finished={stats.get('finished', 0)}")
+    if stats.get("prefix_cache"):
+        line += (f" hit={stats.get('hit_rate', 0.0):.2f} "
+                 f"cached={stats.get('cached_blocks', 0)} "
+                 f"evict={stats.get('evictions', 0)}")
+    return line
 
 
 def build_engine(args, model, params):
@@ -35,7 +48,8 @@ def build_engine(args, model, params):
         return PagedLLMEngine(model, params, num_blocks=args.num_blocks,
                               block_size=args.block_size,
                               max_batch=args.max_batch,
-                              max_len=args.cache_max)
+                              max_len=args.cache_max,
+                              prefix_cache=args.prefix_cache == "on")
     return LLMEngine(model, params, num_slots=args.slots,
                      cache_max=args.cache_max)
 
@@ -50,6 +64,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--num-blocks", type=int, default=32)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="on",
+                    help="radix-tree block reuse across shared prompt "
+                         "prefixes (paged engine only)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)

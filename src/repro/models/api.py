@@ -169,6 +169,33 @@ class Model:
         return tf.stack_pool_init(self.cfg, num_blocks, block_size,
                                   jnp.dtype(dtype or self.cfg.dtype))
 
+    def prefill_paged(self, params, batch, pools, block_table, start_pos, *,
+                      cache_max: int):
+        """Position-offset prefill of an uncached suffix (prefix-cache
+        hit path).  ``batch["tokens"]`` (B,S) holds only the suffix; its
+        first token sits at absolute position ``start_pos``.  The cached
+        prefix KV is read from ``pools`` through ``block_table`` (the
+        matched prefix blocks + any copy-on-write block; pool lanes at
+        positions ``>= start_pos`` are masked so a COW block's diverged
+        tail can never win).  -> (last-token logits, suffix caches sized
+        ``cache_max``) — splice the caches into the suffix's physical
+        blocks with ``write_prefill_blocks``."""
+        cfg = self.cfg
+        if not self.supports_paged:
+            raise ValueError(f"{cfg.name}: paged prefill unsupported "
+                             "(needs a pure-attention decoder-only stack)")
+        s = batch["tokens"].shape[1]
+        positions = start_pos + jnp.arange(s, dtype=jnp.int32)
+        posc = jnp.minimum(positions, cfg.max_position - 1) if (
+            cfg.pos_kind == "learned") else positions
+        x = self._embed_tokens(params, batch["tokens"], posc[None])
+        x, caches = tf.stack_prefill_paged(params["stack"], cfg, x, posc,
+                                           pools, block_table, start_pos,
+                                           cache_max)
+        x = norm_apply(params["final_norm"], x, cfg.norm_kind)
+        logits = unembed_apply(params["embed"], cfg, x[:, -1:, :])
+        return logits, caches
+
     def decode_step_paged(self, params, pools, block_table, tokens, pos,
                           active):
         """Paged one-token step.  tokens (B,1) int32, pos (B,) absolute

@@ -490,6 +490,78 @@ def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
     return y, new_pool
 
 
+def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
+                       start_pos, *, cache_max: int):
+    """Position-offset suffix prefill against a block-paged pool.
+
+    x (B,S,D) holds only a request's *uncached suffix*, whose first
+    token sits at absolute position ``start_pos``; ``positions`` (S,)
+    are the absolute positions ``start_pos + [0..S)``.  The prefix KV —
+    already computed by earlier requests sharing the prompt — is read
+    from ``pool`` through ``block_table`` (B, nb): the request's matched
+    prefix blocks plus, for a copy-on-write partial match, its private
+    copy of the donor block.  Pool lanes at positions ``>= start_pos``
+    are treated as invalid (a COW copy carries the donor's diverged tail
+    until the splice overwrites it — it must never win the mask), as are
+    ``pos = -1`` lanes.
+
+    Returns (y (B,S,D), suffix cache sized ``cache_max``) — the cache
+    has the same layout as ``attn_prefill``'s, holding only the suffix
+    entries (absolute ``pos`` lanes), for the engine to splice into the
+    suffix's physical blocks via ``write_prefill_blocks``.
+    """
+    rope = cfg.pos_kind == "rope"
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, rope, "attn")
+
+    bs = pool["pos"].shape[-1]
+    nb = block_table.shape[1]
+    if cfg.kv_cache_quant:
+        pk = _dequantize_kv(pool["k"][block_table], pool["k_s"][block_table],
+                            k.dtype)
+        pv = _dequantize_kv(pool["v"][block_table], pool["v_s"][block_table],
+                            v.dtype)
+    else:
+        pk = pool["k"][block_table].astype(k.dtype)
+        pv = pool["v"][block_table].astype(v.dtype)
+    pk = pk.reshape(b, nb * bs, kv, hd)
+    pv = pv.reshape(b, nb * bs, kv, hd)
+    ppos = pool["pos"][block_table].reshape(b, nb * bs)
+    ppos = jnp.where(ppos < start_pos, ppos, -1)   # kill diverged COW lanes
+
+    qpos = _bcast_pos(positions, b, s)             # (B,S) absolute
+    k_all = jnp.concatenate([pk, k], axis=1)
+    v_all = jnp.concatenate([pv, v], axis=1)
+    kpos_all = jnp.concatenate([ppos, qpos], axis=1)
+
+    h = q.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    k_rep = _repeat_kv(k_all, h, seq_name="kv_len")
+    v_rep = _repeat_kv(v_all, h, seq_name="kv_len")
+    sc = _scores(q, k_rep, spec=("batch", None, "seq", "kv_len")) * scale
+    kp = kpos_all[:, None, None, :]
+    qp = qpos[:, None, :, None]
+    mask = (kp >= 0) & (kp <= qp)                  # causal over abs positions
+    probs = _softmax(sc, mask).astype(v.dtype)
+    out = _attn_out(probs, v_rep)                  # (B,S,H,hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", "seq", "d_model")
+
+    # suffix cache, same construction as attn_prefill's short-seq branch
+    entries = {"k": k, "v": v, "pos": qpos}
+    if cfg.kv_cache_quant:
+        entries["k"], entries["k_s"] = _quantize_kv(k)
+        entries["v"], entries["v_s"] = _quantize_kv(v)
+    cache = init_cache(cfg, "attn", b, cache_max, k.dtype)
+    for kk, vv in entries.items():
+        cache[kk] = jax.lax.dynamic_update_slice_in_dim(
+            cache[kk], vv.astype(cache[kk].dtype), 0, 1)
+    cache = {kk: shard(vv, *CACHE_LOGICAL[kk]) for kk, vv in cache.items()}
+    return y, cache
+
+
 # ------------------------------------------------------------- cross-attn
 # Whisper decoder cross-attention over encoder output.  The encoder k/v are
 # computed once (at prefill) and stored in the cache under "xk"/"xv".

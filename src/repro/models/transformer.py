@@ -341,6 +341,57 @@ def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
     return x, {"periods": new_period_pools, "rem": new_rem}
 
 
+def block_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
+                        start_pos, *, kind: str, moe: bool, cache_max: int):
+    """Suffix prefill for one layer against its paged pool: attends to
+    the cached prefix (through ``block_table``) plus the suffix itself,
+    and emits the suffix's decode cache for the engine to splice."""
+    if kind != "attn":
+        raise ValueError(f"paged prefill: unsupported layer kind {kind!r}")
+    h = norm_apply(p["norm1"], x, cfg.norm_kind)
+    y, cache = attn.attn_prefill_paged(p["mix"], cfg, h, positions, pool,
+                                       block_table, start_pos,
+                                       cache_max=cache_max)
+    x = x + y
+    h = norm_apply(p["norm2"], x, cfg.norm_kind)
+    y, _ = _ffn(p, cfg, h, moe)
+    return x + y, cache
+
+
+def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
+                        block_table, start_pos, cache_max: int):
+    """-> (x, caches).  Same period scan as ``stack_decode_paged`` with
+    the per-slot pools as scan xs; the per-layer suffix caches come out
+    as scan ys, mirroring ``stack_prefill``'s cache layout."""
+    p, n_per, n_rem = layout(cfg)
+
+    def body(x, xs):
+        period_params, period_pools = xs
+        caches = {}
+        for j in range(p):
+            kind, moe = slot_sig(cfg, j)
+            x, c = block_prefill_paged(period_params[f"slot{j}"], cfg, x,
+                                       positions, period_pools[f"slot{j}"],
+                                       block_table, start_pos, kind=kind,
+                                       moe=moe, cache_max=cache_max)
+            caches[f"slot{j}"] = c
+        return x, caches
+
+    period_caches = {}
+    if n_per:
+        x, period_caches = jax.lax.scan(
+            body, x, (params["periods"], pools["periods"]))
+    rem_caches = {}
+    for j in range(n_rem):
+        kind, moe = slot_sig(cfg, n_per * p + j)
+        x, c = block_prefill_paged(params["rem"][f"layer{j}"], cfg, x,
+                                   positions, pools["rem"][f"layer{j}"],
+                                   block_table, start_pos, kind=kind,
+                                   moe=moe, cache_max=cache_max)
+        rem_caches[f"layer{j}"] = c
+    return x, {"periods": period_caches, "rem": rem_caches}
+
+
 def stack_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int,
                     dtype):
     """Concrete block pools for the whole stack, mirroring the cache

@@ -15,7 +15,8 @@ decode step a single fixed-shape XLA program.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from collections import deque
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -93,38 +94,64 @@ def _is_logical(x) -> bool:
 
 
 class BlockAllocator:
-    """Free-list over physical KV blocks.  Block 0 is the reserved NULL
-    block (block tables pad with it; its pos lanes stay -1 forever), so
-    allocatable ids are ``1..num_blocks-1``."""
+    """Free-list + reference counts over physical KV blocks.  Block 0 is
+    the reserved NULL block (block tables pad with it; its pos lanes stay
+    -1 forever), so allocatable ids are ``1..num_blocks-1``.
+
+    A block may be held by several owners at once — N requests sharing a
+    prompt prefix plus the prefix cache.  ``alloc`` hands out blocks at
+    refcount 1, ``incref`` adds a holder, ``free`` drops one hold per
+    listed block and returns a block to the free list only when the last
+    holder lets go.
+
+    The free list is a FIFO deque: ``free`` appends, ``alloc`` pops from
+    the left — O(1) per block (no sort) and deterministic (blocks are
+    reused in the order they were released).
+    """
 
     def __init__(self, num_blocks: int, block_size: int):
         assert num_blocks >= 2, "need >= 1 allocatable block + null block"
         assert block_size >= 1
         self.num_blocks = num_blocks
         self.block_size = block_size
-        self._free: List[int] = list(range(1, num_blocks))
-        self._live: set = set()
+        self._free: deque = deque(range(1, num_blocks))
+        self._ref: Dict[int, int] = {}
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold ``n_tokens`` cache entries (>= 1)."""
         return max(1, -(-n_tokens // self.block_size))
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` blocks, or None (all-or-nothing) if the pool can't
-        cover the request."""
+        """Pop ``n`` blocks at refcount 1, or None (all-or-nothing) if
+        the pool can't cover the request."""
         if n > len(self._free):
             return None
-        blocks = self._free[:n]
-        del self._free[:n]
-        self._live.update(blocks)
+        blocks = [self._free.popleft() for _ in range(n)]
+        for b in blocks:
+            self._ref[b] = 1
         return blocks
 
-    def free(self, blocks: List[int]) -> None:
+    def incref(self, block: int) -> None:
+        """Add a holder to a live block (sharing a cached prefix)."""
+        assert block in self._ref, f"incref of free block {block}"
+        self._ref[block] += 1
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def free(self, blocks: List[int]) -> List[int]:
+        """Drop one hold per listed block.  Returns the blocks whose last
+        holder just released them (i.e. the ones that actually went back
+        to the free list and need their pool lanes invalidated)."""
+        released = []
         for b in blocks:
-            assert b in self._live, f"double free of block {b}"
-            self._live.discard(b)
-        self._free.extend(blocks)
-        self._free.sort()
+            assert b in self._ref, f"double free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+                released.append(b)
+        return released
 
     @property
     def num_free(self) -> int:
@@ -132,7 +159,7 @@ class BlockAllocator:
 
     @property
     def num_live(self) -> int:
-        return len(self._live)
+        return len(self._ref)
 
     @property
     def num_usable(self) -> int:
@@ -140,28 +167,79 @@ class BlockAllocator:
 
 
 def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
-                         block_size: int) -> Any:
+                         block_size: int, offset: int = 0) -> Any:
     """Splice a (B=1) prefill cache into the request's physical blocks.
 
-    ``single_cache`` must come from ``Model.prefill`` with
-    ``cache_max == len(block_ids) * block_size`` so every leaf's kv_len
-    axis splits exactly into the allocated blocks; unfilled lanes carry
-    ``pos = -1`` from ``init_cache`` and overwrite any stale lanes left
-    by the blocks' previous owner.
+    ``single_cache`` must come from ``Model.prefill`` (or
+    ``Model.prefill_paged``) with ``cache_max == len(block_ids) *
+    block_size - offset`` so every leaf's kv_len axis splits exactly into
+    the allocated blocks; unfilled lanes carry ``pos = -1`` from
+    ``init_cache`` and overwrite any stale lanes left by the blocks'
+    previous owner.
+
+    ``offset`` supports copy-on-write resumption inside a partially
+    matched block: the cache's first lane lands at in-block offset
+    ``offset`` of ``block_ids[0]`` and that block's first ``offset``
+    lanes are left untouched (they hold the prefix KV copied from the
+    shared donor block by ``copy_blocks``).
     """
+    assert 0 <= offset < block_size, (offset, block_size)
     ids = jnp.asarray(block_ids, jnp.int32)
 
     def write(pool_leaf, cache_leaf):
         ax = _batch_axis(pool_leaf.shape, cache_leaf.shape)
         small = jnp.squeeze(cache_leaf, ax)        # seq axis now at ``ax``
+        if offset:
+            pad = [(0, 0)] * small.ndim
+            pad[ax] = (offset, 0)
+            small = jnp.pad(small, pad)            # pad lanes masked below
         shp = small.shape
         nb = shp[ax] // block_size
         assert nb * block_size == shp[ax], (shp, ax, block_size)
         small = small.reshape(shp[:ax] + (nb, block_size) + shp[ax + 1:])
         idx = (slice(None),) * ax + (ids,)
-        return pool_leaf.at[idx].set(small.astype(pool_leaf.dtype))
+        small = small.astype(pool_leaf.dtype)
+        if offset:
+            cur = pool_leaf[idx]
+            lane = jnp.arange(nb * block_size).reshape(nb, block_size)
+            keep = (lane < offset).reshape(
+                (1,) * ax + (nb, block_size) + (1,) * (small.ndim - ax - 2))
+            small = jnp.where(keep, cur, small)
+        return pool_leaf.at[idx].set(small)
 
     return jax.tree.map(write, pools, single_cache)
+
+
+# trailing (non-block) axes per pool-leaf name: leaves are shaped
+# (..., num_blocks, block_size, *tail) with period-stacked variants
+# carrying a leading n_periods axis, so the block axis is located from
+# the right.
+_POOL_LEAF_TAIL = {"pos": 0, "k_s": 1, "v_s": 1, "k": 2, "v": 2}
+
+
+def copy_blocks(pools: Any, src_ids: List[int], dst_ids: List[int]) -> Any:
+    """Copy whole physical blocks ``src -> dst`` in every layer pool —
+    the copy-on-write mechanism: before a request writes into a block it
+    shares with the prefix cache (divergence inside a partially matched
+    block), the engine copies the donor block into a private one.  Any
+    diverged tail lanes copied along are overwritten or mask-invalidated
+    by the subsequent ``write_prefill_blocks(..., offset=j)``, and reads
+    in between mask them via ``pos >= start``."""
+    src = jnp.asarray(src_ids, jnp.int32)
+    dst = jnp.asarray(dst_ids, jnp.int32)
+
+    def walk(node):
+        out = {}
+        for name, leaf in node.items():
+            if isinstance(leaf, dict):
+                out[name] = walk(leaf)
+            else:
+                ax = leaf.ndim - 2 - _POOL_LEAF_TAIL[name]
+                pre = (slice(None),) * ax
+                out[name] = leaf.at[pre + (dst,)].set(leaf[pre + (src,)])
+        return out
+
+    return walk(pools)
 
 
 def invalidate_blocks(pools: Any, block_ids: List[int]) -> Any:

@@ -91,3 +91,51 @@ class LoadGenerator:
             p95_ms=float(np.percentile(lat, 95)),
             rps=len(self.outcomes) / self.duration,
             per_status=per_status)
+
+
+# ---------------------------------------------------------------- LLM loads
+# Prompt workloads for the token-level engines (LLMEngine /
+# PagedLLMEngine drive step() themselves — no virtual clock needed; the
+# workload is just the prompt set with known sharing structure).
+
+
+@dataclasses.dataclass
+class SharedPrefixWorkload:
+    """``num_prefixes`` tenant "system prompts" of ``prefix_len`` tokens,
+    each request appending a unique ``suffix_len``-token user turn —
+    the traffic shape the radix prefix cache targets."""
+
+    prompts: List[np.ndarray]
+    prefix_len: int
+    suffix_len: int
+    num_prefixes: int
+
+    @property
+    def total_prompt_tokens(self) -> int:
+        return sum(len(p) for p in self.prompts)
+
+
+def shared_prefix_workload(*, num_requests: int, prefix_len: int,
+                           suffix_len: int, vocab_size: int,
+                           num_prefixes: int = 1, seed: int = 0,
+                           tag_suffixes: bool = True) -> SharedPrefixWorkload:
+    """Round-robins requests over ``num_prefixes`` shared prefixes; with
+    the prefix cache on, only the first request per tenant pays the
+    prefix prefill.
+
+    ``tag_suffixes`` leads every user turn with a per-request distinct
+    token (a user-id token): divergence then always happens at the first
+    suffix token, so two users' turns never accidentally share a
+    partial-block run (the copy-on-write path has dedicated tests; the
+    workload measures pure prefix sharing with stable prefill shapes)."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(1, vocab_size, prefix_len).astype(np.int32)
+                for _ in range(num_prefixes)]
+    prompts = []
+    for i in range(num_requests):
+        suffix = rng.integers(1, vocab_size, suffix_len).astype(np.int32)
+        if tag_suffixes:
+            suffix[0] = 1 + (i % (vocab_size - 1))
+        prompts.append(np.concatenate([prefixes[i % num_prefixes], suffix]))
+    return SharedPrefixWorkload(prompts, prefix_len, suffix_len,
+                                num_prefixes)

@@ -29,11 +29,34 @@ import numpy as np
 
 from repro.serving.balancer import LoadBalancer, Overloaded
 from repro.serving.broker import Broker, PartitionFull
-from repro.serving.kvcache import (BlockAllocator, SlotManager,
+from repro.serving.kvcache import (BlockAllocator, SlotManager, copy_blocks,
                                    invalidate_blocks, write_prefill_blocks,
                                    write_slot)
+from repro.serving.prefix_cache import MatchResult, PrefixCache
 from repro.serving.sim import Clock, QueuedResource
 from repro.serving.store import ResultStore
+
+#: ``stats()`` gauge schema — THE reference for every consumer (the
+#: balancer snapshot embeds the dict verbatim; ``launch/serve.py``
+#: renders it; benchmarks persist it).  Consumers must read with
+#: ``.get()``: older engines / persisted snapshots may omit newer keys.
+#:
+#:   engine            "slot" | "paged"
+#:   queue_depth       requests waiting for admission
+#:   active            requests currently decoding
+#:   free_blocks / used_blocks / total_blocks
+#:                     pool accounting (slot engine: 1 slot == 1 block)
+#:   pool_occupancy    used_blocks / total_blocks
+#:   admissions / preemptions / finished
+#:                     lifetime counters
+#:   peak_active       high-water concurrent requests        (paged)
+#:   prefill_tokens    prompt tokens actually computed       (paged)
+#:   prefix_cache      1 when the radix prefix cache is on   (paged)
+#:   hit_rate          prompt tokens served from cache / all prompt
+#:                     tokens                                (paged)
+#:   cached_blocks     blocks currently held by the tree     (paged)
+#:   evictions / cow_copies
+#:                     prefix-cache lifetime counters        (paged)
 
 
 # ---------------------------------------------------------------- Stratus
@@ -223,6 +246,7 @@ class LLMEngine:
         self.active: Dict[int, GenRequest] = {}
         self.queue: List[GenRequest] = []
         self._rid = 0
+        self.finished_count = 0
 
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_max=cache_max))
@@ -291,10 +315,11 @@ class LLMEngine:
                 del self.active[s]
                 self.slots.free(s)
                 self.pos[s] = -1
+                self.finished_count += 1
         return done
 
     def stats(self) -> Dict[str, float]:
-        """Queue/capacity gauges, shape-compatible with the paged engine's
+        """Queue/capacity gauges per the module-level stats schema
         (slots stand in for blocks: one slot == cache_max tokens)."""
         live = len(self.active)
         return {
@@ -307,6 +332,7 @@ class LLMEngine:
             "pool_occupancy": live / max(self.num_slots, 1),
             "preemptions": 0,
             "admissions": self._rid - len(self.queue),
+            "finished": self.finished_count,
         }
 
 
@@ -330,10 +356,17 @@ class PagedLLMEngine:
       * on pool exhaustion mid-decode the *youngest* active request is
         preempted: its blocks are freed and it is requeued at the front,
         to resume later by re-prefilling prompt + generated tokens
-        (greedy decode makes the resumed continuation token-identical).
+        (greedy decode makes the resumed continuation token-identical);
+      * with ``prefix_cache=True`` a radix tree over per-block token
+        keys (``serving/prefix_cache.py``) maps previously computed full
+        prompt blocks into new requests' block tables for free
+        (refcounted sharing), prefilling **only the uncached suffix**
+        via ``Model.prefill_paged``; a divergence inside a partially
+        matched block is served copy-on-write, and refcount-0 cached
+        blocks are LRU-evicted before any preemption.
 
     Occupancy/queue gauges are exposed via ``stats()`` for the balancer
-    and the serve CLI.
+    and the serve CLI (schema: module-level note above).
 
     Known trade-off: prefill is jitted per (sequence length, cache_max)
     pair, so preempt-resume retraces per distinct resume length —
@@ -343,7 +376,8 @@ class PagedLLMEngine:
 
     def __init__(self, model, params, num_blocks: int = 32,
                  block_size: int = 16, max_batch: int = 8,
-                 max_len: int = 256, eos_id: Optional[int] = None):
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 prefix_cache: bool = False):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
                              "pure-attention decoder-only stack")
@@ -355,6 +389,8 @@ class PagedLLMEngine:
         self.eos_id = eos_id
         self.allocator = BlockAllocator(num_blocks, block_size)
         self.pools = model.pool_init(num_blocks, block_size)
+        self.prefix_cache: Optional[PrefixCache] = \
+            PrefixCache(block_size) if prefix_cache else None
         self.nb_max = -(-max_len // block_size)
         self.block_table = np.zeros((max_batch, self.nb_max), np.int32)
         self.pos = np.zeros((max_batch,), np.int64)
@@ -366,10 +402,18 @@ class PagedLLMEngine:
         self.admissions = 0
         self.finished_count = 0
         self.peak_active = 0
+        self.prefill_tokens = 0
+        self.cow_copies = 0
 
         self._prefill = jax.jit(
             lambda p, b, cm: model.prefill(p, b, cache_max=cm),
             static_argnums=2)
+        # suffix prefill retraces per (suffix_len, prefix blocks,
+        # cache_max) triple — same length-bucketing caveat as _prefill.
+        self._prefill_suffix = jax.jit(
+            lambda p, b, pools, bt, sp, cm: model.prefill_paged(
+                p, b, pools, bt, sp, cache_max=cm),
+            static_argnums=5)
         self._decode = jax.jit(model.decode_step_paged)
 
     # ------------------------------------------------------------ client
@@ -397,7 +441,9 @@ class PagedLLMEngine:
         return not self.queue and not self.active
 
     def stats(self) -> Dict[str, float]:
+        """Gauges per the module-level stats schema."""
         alloc = self.allocator
+        pc = self.prefix_cache
         return {
             "engine": "paged",
             "queue_depth": len(self.queue),
@@ -408,7 +454,14 @@ class PagedLLMEngine:
             "pool_occupancy": alloc.num_live / max(alloc.num_usable, 1),
             "preemptions": self.preemptions,
             "admissions": self.admissions,
+            "finished": self.finished_count,
             "peak_active": self.peak_active,
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_cache": int(pc is not None),
+            "hit_rate": pc.hit_rate if pc else 0.0,
+            "cached_blocks": pc.cached_blocks if pc else 0,
+            "evictions": pc.evictions if pc else 0,
+            "cow_copies": self.cow_copies,
         }
 
     # ------------------------------------------------------------ sched
@@ -428,17 +481,67 @@ class PagedLLMEngine:
                 need += 1
         return need
 
+    def _seq_for(self, req: GenRequest) -> np.ndarray:
+        """Prompt + already-generated tokens (a preempted request resumes
+        by re-prefilling both; greedy decode keeps it token-identical)."""
+        if not req.out_tokens:
+            return req.prompt
+        return np.concatenate([req.prompt,
+                               np.asarray(req.out_tokens, np.int32)])
+
+    def _match_for(self, req: GenRequest, probe: bool) -> MatchResult:
+        """Cached-prefix match for a request.  The last sequence token is
+        reserved: the uncached suffix must never be empty (its final
+        logits produce the next output token)."""
+        seq = self._seq_for(req)
+        tokens = seq[:-1]
+        if probe:
+            return self.prefix_cache.probe(tokens)
+        return self.prefix_cache.match(tokens)
+
     def _admission_ok(self, req: GenRequest) -> bool:
         seq_len = len(req.prompt) + len(req.out_tokens)
         need = self.allocator.blocks_for(seq_len)
+        avail = self.allocator.num_free
+        if self.prefix_cache is not None:
+            m = self._match_for(req, probe=True)
+            need -= len(m.blocks)             # mapped for free
+            # refcount-0 cached blocks are evictable headroom — except
+            # the ones this very request is about to take a hold on.
+            protected = set(m.blocks)
+            if m.partial_len:
+                protected.add(m.partial_block)
+            avail += self.prefix_cache.evictable(self.allocator,
+                                                 frozenset(protected))
         if seq_len % self.block_size == 0:
             need += 1      # its own first decode step crosses a boundary
-        free_after = self.allocator.num_free - need
+        free_after = avail - need
         if free_after < 0:
             return not self.active            # always keep making progress
         if not self.active:
             return True
         return free_after >= self._next_step_block_need()
+
+    def _alloc_or_evict(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks, LRU-evicting refcount-0 cached blocks
+        first when the free list falls short — eviction always precedes
+        preemption."""
+        got = self.allocator.alloc(n)
+        if got is not None or self.prefix_cache is None:
+            return got
+        released = self.prefix_cache.evict(n - self.allocator.num_free,
+                                           self.allocator)
+        if released:
+            self.pools = invalidate_blocks(self.pools, released)
+        return self.allocator.alloc(n)
+
+    def _free_blocks(self, blocks: List[int]) -> None:
+        """Drop this request's hold; invalidate only the blocks whose
+        last holder released (blocks the prefix cache still holds keep
+        their KV readable for future matches)."""
+        released = self.allocator.free(blocks)
+        if released:
+            self.pools = invalidate_blocks(self.pools, released)
 
     def step(self, now: float = 0.0) -> List[GenRequest]:
         """Admit one queued request (prefill) OR advance the whole batch
@@ -452,28 +555,67 @@ class PagedLLMEngine:
 
     def _admit(self, now: float) -> List[GenRequest]:
         req = self.queue.pop(0)
-        # resume-aware: a preempted request re-prefills its prompt plus
+        # resume-aware: a preempted request re-prefills (or re-matches —
+        # its own blocks usually survive in the tree) its prompt plus
         # everything it already generated (same greedy continuation).
-        seq = np.concatenate([req.prompt,
-                              np.asarray(req.out_tokens, np.int32)]) \
-            if req.out_tokens else req.prompt
-        nb = self.allocator.blocks_for(len(seq))
-        blocks = self.allocator.alloc(nb)
+        seq = self._seq_for(req)
+        bs = self.block_size
+        nb_total = self.allocator.blocks_for(len(seq))
+        match = MatchResult([]) if self.prefix_cache is None else \
+            self._match_for(req, probe=False)
+        k, j = len(match.blocks), match.partial_len
+        # take holds on the shared prefix + COW donor FIRST so eviction
+        # inside _alloc_or_evict can never reclaim them out from under us
+        for b in match.blocks:
+            self.allocator.incref(b)
+        if j:
+            self.allocator.incref(match.partial_block)
+        blocks = self._alloc_or_evict(nb_total - k)
+        if blocks is None and j:
+            # pathological fit: our hold on the COW donor is pinning the
+            # last block a drained pool needs — forgo the partial match
+            # (the donor becomes evictable again) and retry.
+            self.allocator.free([match.partial_block])
+            match, j = MatchResult(match.blocks), 0
+            blocks = self._alloc_or_evict(nb_total - k)
         assert blocks is not None, "admission check guarantees capacity"
         row = self._free_row()
-        logits, cache1 = self._prefill(self.params, {"tokens": seq[None, :]},
-                                       nb * self.block_size)
-        self.pools = write_prefill_blocks(self.pools, cache1, blocks,
-                                          self.block_size)
+        start = k * bs + j
+        if start:
+            if j:   # copy-on-write: private copy of the donor block
+                self.pools = copy_blocks(self.pools, [match.partial_block],
+                                         [blocks[0]])
+                self.cow_copies += 1
+                self.allocator.free([match.partial_block])   # drop COW hold
+            suffix = np.ascontiguousarray(seq[start:])
+            prefix_table = match.blocks + (blocks[:1] if j else [])
+            bt = np.asarray(prefix_table, np.int32)[None, :]
+            logits, cache1 = self._prefill_suffix(
+                self.params, {"tokens": suffix[None, :]}, self.pools,
+                jnp.asarray(bt), jnp.int32(start),
+                len(blocks) * bs - j)
+            self.pools = write_prefill_blocks(self.pools, cache1, blocks,
+                                              bs, offset=j)
+            self.prefill_tokens += len(suffix)
+        else:
+            logits, cache1 = self._prefill(self.params,
+                                           {"tokens": seq[None, :]},
+                                           nb_total * bs)
+            self.pools = write_prefill_blocks(self.pools, cache1, blocks, bs)
+            self.prefill_tokens += len(seq)
+        all_blocks = match.blocks + blocks
+        if self.prefix_cache is not None:
+            # publish this request's full blocks (matched ones dedupe)
+            self.prefix_cache.insert(seq, all_blocks, self.allocator)
         self.block_table[row, :] = 0
-        self.block_table[row, :nb] = blocks
+        self.block_table[row, :len(all_blocks)] = all_blocks
         self.pos[row] = len(seq)
         tok = int(np.argmax(np.asarray(logits)[0, -1]))
         req.out_tokens.append(tok)
         if req.first_token_at is None:
             req.first_token_at = now
         self.active[row] = req
-        self.row_blocks[row] = list(blocks)
+        self.row_blocks[row] = list(all_blocks)
         self.admissions += 1
         self.peak_active = max(self.peak_active, len(self.active))
         return self._collect(now)
@@ -481,9 +623,7 @@ class PagedLLMEngine:
     def _preempt_youngest(self) -> None:
         row = max(self.active, key=lambda r: self.active[r].rid)
         req = self.active.pop(row)
-        blocks = self.row_blocks.pop(row)
-        self.pools = invalidate_blocks(self.pools, blocks)
-        self.allocator.free(blocks)
+        self._free_blocks(self.row_blocks.pop(row))
         self.block_table[row, :] = 0
         self.pos[row] = 0
         self.queue.insert(0, req)             # resumes as soon as blocks free
@@ -491,12 +631,13 @@ class PagedLLMEngine:
 
     def _decode_all(self, now: float) -> List[GenRequest]:
         # grow block tables for the next write, oldest request first;
-        # preempt the youngest instead of failing when the pool is dry.
+        # evict cold cached blocks, then preempt the youngest, instead
+        # of failing when the pool is dry.
         for row in sorted(self.active, key=lambda r: self.active[r].rid):
             while row in self.active and \
                     int(self.pos[row]) // self.block_size >= \
                     len(self.row_blocks[row]):
-                got = self.allocator.alloc(1)
+                got = self._alloc_or_evict(1)
                 if got is not None:
                     self.row_blocks[row].append(got[0])
                     self.block_table[row, len(self.row_blocks[row]) - 1] = \
@@ -537,9 +678,7 @@ class PagedLLMEngine:
                 req.finished_at = now
                 done.append(req)
                 del self.active[row]
-                blocks = self.row_blocks.pop(row)
-                self.pools = invalidate_blocks(self.pools, blocks)
-                self.allocator.free(blocks)
+                self._free_blocks(self.row_blocks.pop(row))
                 self.block_table[row, :] = 0
                 self.pos[row] = 0
                 self.finished_count += 1

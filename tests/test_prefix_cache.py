@@ -1,0 +1,371 @@
+"""Prefix-sharing KV cache tests.
+
+Bottom-up like the paged suite: allocator refcount/free-list semantics,
+radix-tree match/insert/evict (including the copy-on-write partial
+match), hypothesis property tests over the refcount invariants, then the
+engine-level acceptance criteria — with the cache on, a shared-prefix
+workload must prefill strictly fewer tokens and stay token-identical
+with the cache off, including through copy-on-write divergence and
+LRU-eviction-before-preemption.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_cfg
+from repro.models.api import Model
+from repro.serving.kvcache import BlockAllocator, copy_blocks
+from repro.serving.loadgen import shared_prefix_workload
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.server import PagedLLMEngine
+
+
+# ------------------------------------------------------------ allocator
+
+
+def test_allocator_refcount_shared_release():
+    a = BlockAllocator(num_blocks=6, block_size=4)
+    got = a.alloc(2)
+    a.incref(got[0])                           # second holder (the tree)
+    assert a.free(got) == [got[1]]             # got[0] still held
+    assert a.refcount(got[0]) == 1
+    assert a.num_free == 4 and a.num_live == 1
+    assert a.free([got[0]]) == [got[0]]        # last holder releases
+    assert a.num_free == 5 and a.num_live == 0
+
+
+def test_allocator_free_list_fifo_deterministic():
+    """O(1) free(): released blocks are reused in release order (no
+    sort), and allocation order is fully deterministic."""
+    a = BlockAllocator(num_blocks=5, block_size=1)
+    first = a.alloc(4)
+    assert first == [1, 2, 3, 4]
+    a.free([first[2]])
+    a.free([first[0]])
+    assert a.alloc(2) == [first[2], first[0]]  # FIFO of the free deque
+
+
+def test_allocator_incref_requires_live_block():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    with pytest.raises(AssertionError, match="incref of free block"):
+        a.incref(1)
+
+
+# ------------------------------------------------------------ radix tree
+
+
+def test_tree_match_full_partial_and_stats():
+    a = BlockAllocator(num_blocks=16, block_size=4)
+    c = PrefixCache(block_size=4)
+    toks = list(range(10, 18))                 # 2 full blocks
+    blocks = a.alloc(2)
+    assert c.insert(toks, blocks, a) == 2
+    assert c.cached_blocks == 2
+    assert a.refcount(blocks[0]) == 2          # request + tree
+
+    m = c.match(toks + [99, 98])               # both blocks + no partial
+    assert m.blocks == blocks and m.partial_len == 0
+    m2 = c.match(toks[:4] + [77, 78, 79, 80, 81])
+    assert m2.blocks == [blocks[0]] and m2.partial_len == 0
+    # shares 2 leading tokens inside the second block -> COW donor
+    m3 = c.match(toks[:6] + [1, 2, 3])
+    assert m3.blocks == [blocks[0]]
+    assert m3.partial_block == blocks[1] and m3.partial_len == 2
+    assert 0.0 < c.hit_rate < 1.0
+    probe = c.probe(toks)
+    assert probe.blocks == blocks              # read-only view agrees
+
+
+def test_tree_insert_existing_key_keeps_first_copy():
+    a = BlockAllocator(num_blocks=16, block_size=2)
+    c = PrefixCache(block_size=2)
+    b1 = a.alloc(1)
+    assert c.insert([5, 6], b1, a) == 1
+    b2 = a.alloc(1)                            # duplicate content, own block
+    assert c.insert([5, 6], b2, a) == 0        # tree keeps the first copy
+    assert c.match([5, 6, 9]).blocks == b1
+    assert a.refcount(b2[0]) == 1              # still only its request
+
+
+def test_tree_evicts_lru_leaves_only_and_cascades():
+    a = BlockAllocator(num_blocks=16, block_size=2)
+    c = PrefixCache(block_size=2)
+    chain = a.alloc(2)                         # tokens [1,2,3,4]: parent+leaf
+    c.insert([1, 2, 3, 4], chain, a)
+    other = a.alloc(1)
+    c.insert([7, 8], other, a)
+    a.free(chain)
+    a.free(other)                              # now only the tree holds all 3
+    c.match([7, 8])                            # refresh LRU: chain is colder
+    # interior node (chain[0]) must not go before its leaf; LRU leaf first
+    assert c.evict(1, a) == [chain[1]]
+    # cascade: the exposed parent (older than the just-matched `other`)
+    # goes next, then `other`
+    assert c.evict(10, a) == [chain[0], other[0]]
+    assert c.cached_blocks == 0 and a.num_live == 0
+
+
+def test_tree_eviction_skips_request_held_blocks():
+    a = BlockAllocator(num_blocks=16, block_size=2)
+    c = PrefixCache(block_size=2)
+    held = a.alloc(1)                          # request keeps holding this
+    c.insert([1, 2], held, a)
+    assert c.evict(5, a) == []                 # refcount 2: not evictable
+    assert c.evictable(a) == 0
+    a.free(held)
+    assert c.evictable(a) == 1
+    assert c.evictable(a, frozenset(held)) == 0    # exclusion honored
+    assert c.evict(5, a) == held
+
+
+# ------------------------------------------------------------ properties
+#
+# A driven simulation of the engine's cache protocol.  Invariants after
+# every op:
+#   * allocator refcount(b) == #requests holding b + (1 if b in tree)
+#   * eviction only ever releases blocks no request holds
+#   * free + live == usable (nothing leaks, nothing double-frees —
+#     double free would trip the allocator's assertion)
+
+
+def _sim_admit(cache, alloc, length, tokens, held):
+    m = cache.match(tokens[:-1] if len(tokens) > 1 else [])
+    k = len(m.blocks)
+    need = alloc.blocks_for(length) - k
+    for b in m.blocks:
+        alloc.incref(b)
+    if m.partial_len:
+        alloc.incref(m.partial_block)
+    new = alloc.alloc(need)
+    if new is None:
+        cache.evict(need - alloc.num_free, alloc)
+        new = alloc.alloc(need)
+    if m.partial_len:
+        alloc.free([m.partial_block])
+    if new is None:                            # pool too small: roll back
+        for b in m.blocks:
+            alloc.free([b])
+        return
+    blocks = m.blocks + new
+    cache.insert(tokens, blocks, alloc)
+    held.append(blocks)
+
+
+def _check_invariants(cache, alloc, held):
+    tree_blocks = cache.blocks()
+    assert len(tree_blocks) == len(set(tree_blocks)) == cache.cached_blocks
+    counts = {}
+    for blocks in held:
+        for b in blocks:
+            counts[b] = counts.get(b, 0) + 1
+    for b in set(tree_blocks) | set(counts):
+        expect = counts.get(b, 0) + (1 if b in tree_blocks else 0)
+        assert alloc.refcount(b) == expect, (b, expect, alloc.refcount(b))
+    assert alloc.num_free + alloc.num_live == alloc.num_usable
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=70),
+       st.integers(8, 20))
+def test_prefix_cache_refcount_invariant_property(ops, num_blocks):
+    """insert/match/evict/free never double-free; refcounts always equal
+    tree + request holders; eviction only releases request-refcount-0
+    blocks."""
+    bs = 2
+    alloc = BlockAllocator(num_blocks=num_blocks, block_size=bs)
+    cache = PrefixCache(block_size=bs)
+    rng = np.random.default_rng(num_blocks * 1000 + len(ops))
+    held = []
+    for op in ops:
+        if op <= 4:                            # admit (tiny vocab: collisions)
+            length = int(rng.integers(1, 9))
+            tokens = [int(t) for t in rng.integers(0, 3, length)]
+            _sim_admit(cache, alloc, length, tokens, held)
+        elif op <= 6 and held:                 # finish a request
+            blocks = held.pop(int(rng.integers(len(held))))
+            alloc.free(blocks)
+        elif op == 7:                          # evict one block
+            before = set(b for blocks in held for b in blocks)
+            released = cache.evict(1, alloc)
+            assert not (set(released) & before)   # never a held block
+        else:                                  # probe only
+            cache.probe([int(t) for t in rng.integers(0, 3, 4)])
+        _check_invariants(cache, alloc, held)
+    for blocks in held:
+        alloc.free(blocks)
+    held = []
+    _check_invariants(cache, alloc, held)
+    cache.evict(alloc.num_usable, alloc)
+    assert cache.cached_blocks == 0
+    assert alloc.num_free == alloc.num_usable
+
+
+# ------------------------------------------------------------ pool COW
+
+
+def test_copy_blocks_copies_every_leaf(rng_key):
+    model = Model(reduced_cfg("qwen3-0.6b"))
+    params = model.init(rng_key)
+    bs = 4
+    pools = model.pool_init(num_blocks=6, block_size=bs)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    from repro.serving.kvcache import write_prefill_blocks
+    _, cache1 = model.prefill(params, {"tokens": prompt[None]},
+                              cache_max=2 * bs)
+    pools = write_prefill_blocks(pools, cache1, [2, 4], bs)
+    pools = copy_blocks(pools, [4], [5])
+
+    def walk(node, fn):
+        for k, v in node.items():
+            if isinstance(v, dict):
+                walk(v, fn)
+            else:
+                fn(k, v)
+
+    def check(name, leaf):
+        arr = np.asarray(leaf)
+        ax = arr.ndim - 2 - {"pos": 0, "k_s": 1, "v_s": 1,
+                             "k": 2, "v": 2}[name]
+        src = np.take(arr, 4, axis=ax)
+        dst = np.take(arr, 5, axis=ax)
+        np.testing.assert_array_equal(src, dst)
+        if name == "pos":
+            assert np.take(arr, 3, axis=ax).max() == -1   # others untouched
+
+    walk(pools, check)
+
+
+# ------------------------------------------------------------ engine
+
+
+@pytest.fixture(scope="module")
+def qwen_model(rng_key):
+    cfg = reduced_cfg("qwen3-0.6b")
+    model = Model(cfg)
+    return model, model.init(rng_key)
+
+
+def _drain(engine, max_steps=800):
+    outs = {}
+    for _ in range(max_steps):
+        for r in engine.step():
+            outs[r.rid] = list(r.out_tokens)
+        if engine.idle:
+            break
+    assert engine.idle
+    return outs
+
+
+def test_prefix_cache_token_identical_and_saves_prefill(qwen_model):
+    """Acceptance core: shared-prefix workload, same pool — the cache
+    must cut prefill tokens, report hits, and change no output token."""
+    model, params = qwen_model
+    wl = shared_prefix_workload(num_requests=4, prefix_len=16, suffix_len=4,
+                                vocab_size=model.cfg.vocab_size, seed=0)
+
+    def run(enable):
+        engine = PagedLLMEngine(model, params, num_blocks=33, block_size=4,
+                                max_batch=8, max_len=48,
+                                prefix_cache=enable)
+        for p in wl.prompts:
+            engine.submit(p, max_new=4)
+        return _drain(engine), engine
+
+    off_outs, off_e = run(False)
+    on_outs, on_e = run(True)
+    assert on_outs == off_outs                       # token-identical
+    assert on_e.prefill_tokens < off_e.prefill_tokens / 2
+    s = on_e.stats()
+    assert s["prefix_cache"] == 1 and s["hit_rate"] > 0.5
+    assert s["cached_blocks"] > 0 and s["finished"] == 4
+    # blocks published to the tree outlive their requests; cache-off
+    # returns everything to the free list
+    assert off_e.allocator.num_live == 0
+    assert on_e.allocator.num_live == s["cached_blocks"]
+
+
+def test_prefix_cache_cow_partial_block_divergence(qwen_model):
+    """Request B shares 2 full blocks + 2 tokens inside block 2 with
+    request A: the engine must serve the overlap copy-on-write and still
+    produce exactly the no-cache tokens for both."""
+    model, params = qwen_model
+    cfg = model.cfg
+    rng = np.random.default_rng(7)
+    pa = rng.integers(1, cfg.vocab_size, 14).astype(np.int32)
+    pb = pa.copy()
+    pb[10] = (int(pb[10]) % (cfg.vocab_size - 2)) + 1
+    assert pb[10] != pa[10]
+
+    def run(enable):
+        engine = PagedLLMEngine(model, params, num_blocks=33, block_size=4,
+                                max_batch=4, max_len=32,
+                                prefix_cache=enable)
+        engine.submit(pa, max_new=4)
+        engine.submit(pb, max_new=4)
+        return _drain(engine), engine
+
+    off_outs, _ = run(False)
+    on_outs, on_e = run(True)
+    assert on_outs == off_outs
+    assert on_e.cow_copies == 1                      # the COW path ran
+
+
+def test_prefix_cache_evicts_before_preempting(qwen_model):
+    """A pool too small to keep every finished prefix cached must
+    LRU-evict refcount-0 cached blocks to admit new work — and never
+    preempt while eviction can free blocks."""
+    model, params = qwen_model
+    cfg = model.cfg
+    engine = PagedLLMEngine(model, params, num_blocks=10, block_size=4,
+                            max_batch=2, max_len=32, prefix_cache=True)
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        engine.submit(rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                      max_new=4)
+    outs = _drain(engine)
+    assert len(outs) == 6
+    assert engine.stats()["evictions"] > 0
+    assert engine.preemptions == 0
+
+
+def test_prefix_cache_preemption_round_trip(qwen_model):
+    """Preempt-and-requeue with the cache on: the resumed request
+    re-matches its own published blocks and still finishes with the
+    tokens a roomy pool produces."""
+    model, params = qwen_model
+    cfg = model.cfg
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(4)]
+
+    roomy = PagedLLMEngine(model, params, num_blocks=40, block_size=4,
+                           max_batch=8, max_len=64, prefix_cache=True)
+    for p in prompts:
+        roomy.submit(p, max_new=12)
+    ref_outs = _drain(roomy)
+    assert roomy.preemptions == 0
+
+    tight = PagedLLMEngine(model, params, num_blocks=10, block_size=4,
+                           max_batch=8, max_len=64, prefix_cache=True)
+    for p in prompts:
+        tight.submit(p, max_new=12)
+    tight_outs = _drain(tight, max_steps=2000)
+    assert tight_outs == ref_outs
+    # preemption isn't guaranteed here (eviction absorbs most pressure),
+    # but accounting must balance either way
+    alive = tight.allocator.num_live
+    assert alive == tight.stats()["cached_blocks"]
+
+
+def test_prefix_cache_off_keeps_pr1_accounting(qwen_model):
+    """Default (off) engine behaviour is unchanged: no tree, every block
+    returned on finish, gauges report the cache as disabled."""
+    model, params = qwen_model
+    engine = PagedLLMEngine(model, params, num_blocks=17, block_size=4,
+                            max_batch=4, max_len=32)
+    engine.submit(np.arange(1, 9, dtype=np.int32), max_new=4)
+    _drain(engine)
+    s = engine.stats()
+    assert s["prefix_cache"] == 0 and s["cached_blocks"] == 0
+    assert s["hit_rate"] == 0.0 and s["finished"] == 1
+    assert engine.allocator.num_live == 0

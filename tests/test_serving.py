@@ -114,6 +114,37 @@ def test_balancer_overload():
         lb.pick()
 
 
+def test_balancer_attach_engine_stats_passthrough():
+    """Engine gauges ride along verbatim in balancer snapshots; without
+    an attached source the key is absent (consumers .get())."""
+    lb = LoadBalancer(num_replicas=2)
+    assert "engine" not in lb.stats()
+    lb.attach_engine_stats(lambda: {"queue_depth": 3, "finished": 7})
+    snap = lb.stats()
+    assert snap["engine"] == {"queue_depth": 3, "finished": 7}
+    assert snap["dispatched"] == 0 and snap["replica_loads"] == [0, 0]
+
+
+def test_power_of_two_in_flight_never_negative():
+    """pick/release cycles under p2c keep per-replica in_flight exact:
+    never negative, zero after full drain, and dispatched == served."""
+    lb = LoadBalancer(num_replicas=3, concurrency=2, queue_limit=1,
+                      policy="power_of_two", seed=5)
+    live = []
+    for i in range(200):
+        try:
+            live.append(lb.pick())
+        except Overloaded:
+            while live:
+                lb.release(live.pop())
+        assert all(r.in_flight >= 0 for r in lb.replicas)
+    while live:
+        lb.release(live.pop())
+    assert all(r.in_flight == 0 for r in lb.replicas)
+    assert lb.dispatched == sum(r.served for r in lb.replicas)
+    assert lb.rejected > 0                     # the overload path ran
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 5), st.integers(1, 4), st.integers(0, 3),
        st.integers(1, 200))
@@ -293,6 +324,45 @@ def test_llm_engine_matches_sequential_decode(rng_key):
         if engine.idle:
             break
     assert [finished[i + 1] for i in range(3)] == expected
+
+
+def test_llm_engine_finished_gauge(rng_key):
+    """Both engines surface lifetime completions via stats()['finished']
+    (the counter existed on the paged engine but never reached the
+    gauges)."""
+    cfg = reduced_cfg("qwen3-0.6b")
+    model = Model(cfg)
+    params = model.init(rng_key)
+    engine = LLMEngine(model, params, num_slots=2, cache_max=32)
+    assert engine.stats()["finished"] == 0
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        engine.submit(rng.integers(1, cfg.vocab_size, 6), max_new=2)
+    for _ in range(100):
+        engine.step()
+        if engine.idle:
+            break
+    assert engine.stats()["finished"] == 3
+
+
+def test_fmt_stats_tolerates_old_schema():
+    """_fmt_stats must render stats dicts predating newer gauges (no
+    KeyError on finished / prefix-cache keys) and show them when
+    present."""
+    from repro.launch.serve import _fmt_stats
+
+    pr1_snapshot = {"engine": "paged", "queue_depth": 1, "active": 2,
+                    "free_blocks": 3, "used_blocks": 4, "total_blocks": 7,
+                    "pool_occupancy": 0.57, "preemptions": 0,
+                    "admissions": 2}
+    line = _fmt_stats(pr1_snapshot)
+    assert "finished=0" in line and "hit=" not in line
+    full = dict(pr1_snapshot, finished=5, prefix_cache=1, hit_rate=0.25,
+                cached_blocks=6, evictions=1)
+    line = _fmt_stats(full)
+    assert "finished=5" in line and "hit=0.25" in line and "cached=6" in line
+    assert "evict=1" in line
+    assert _fmt_stats({})                      # even an empty dict renders
 
 
 def test_llm_engine_hybrid_arch(rng_key):
