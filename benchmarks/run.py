@@ -411,6 +411,109 @@ def bench_serving_prefix():
 
 
 # ----------------------------------------------------------------------
+# 7d. Decode execution layer: jnp block gather vs Pallas paged-attention
+#     kernel (interpret on CPU) vs bucketed prefill, mixed-length
+#     workload -> BENCH_decode.json.
+# ----------------------------------------------------------------------
+
+
+def bench_serving_decode():
+    from repro.configs.base import get_config
+    from repro.models.api import Model
+    from repro.serving.loadgen import mixed_length_workload
+    from repro.serving.server import PagedLLMEngine
+
+    smoke = bool(globals().get("_SMOKE"))
+    out_path = "BENCH_decode.json"
+    print("\n# paged decode execution layer: jnp gather vs Pallas kernel "
+          "(interpret off-TPU) vs bucketed prefill, mixed-length workload "
+          f"({'smoke' if smoke else 'full'} config)")
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    requests = 4 if smoke else 10
+    wl = mixed_length_workload(num_requests=requests,
+                               vocab_size=cfg.vocab_size,
+                               min_len=4, max_len=40, median_len=10.0,
+                               min_new=2, max_new=4 if smoke else 8, seed=0)
+    max_len = 64
+    num_blocks = 129
+
+    # the kernel engine must actually exercise the Pallas path on CPU:
+    # force interpret-mode dispatch for this benchmark (CI sets it
+    # globally; restore whatever was there after).
+    prev = os.environ.get("REPRO_FORCE_PALLAS_INTERPRET")
+    os.environ["REPRO_FORCE_PALLAS_INTERPRET"] = "1"
+    try:
+        def drive(**kw):
+            engine = PagedLLMEngine(model, params, num_blocks=num_blocks,
+                                    block_size=8, max_batch=8,
+                                    max_len=max_len, **kw)
+            # warmup pass compiles every trace outside the timed window
+            for p, n in zip(wl.prompts, wl.max_news):
+                engine.submit(p, max_new=n)
+            while not engine.idle:
+                engine.step()
+            t0 = time.time()
+            done = []
+            for p, n in zip(wl.prompts, wl.max_news):
+                engine.submit(p, max_new=n)
+            while not engine.idle:
+                done.extend(engine.step())
+            wall = time.time() - t0
+            toks = sum(len(r.out_tokens) for r in done)
+            s = engine.stats()
+            res = {"tok_per_s": round(toks / wall, 2),
+                   "wall_s": round(wall, 3), "tokens": toks,
+                   "prefill_compiles": s["prefill_compiles"],
+                   "decode_compiles": s["decode_compiles"],
+                   "decode_kernel": s["decode_kernel"]}
+            return res, {r.rid: r.out_tokens for r in done}
+
+        jnp_res, jnp_outs = drive(decode_kernel=False,
+                                  prefill_buckets="off")
+        kern_res, kern_outs = drive(decode_kernel=True,
+                                    prefill_buckets="off")
+        buck_res, buck_outs = drive(decode_kernel=False,
+                                    prefill_buckets="auto")
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FORCE_PALLAS_INTERPRET", None)
+        else:
+            os.environ["REPRO_FORCE_PALLAS_INTERPRET"] = prev
+
+    report = {
+        "arch": cfg.name,
+        "config": {"requests": requests, "max_len": max_len,
+                   "block_size": 8, "num_blocks": num_blocks,
+                   "distinct_prompt_lens": wl.distinct_prompt_lens,
+                   "smoke": smoke},
+        "paged_jnp": jnp_res,
+        "paged_kernel": kern_res,
+        "bucketed_prefill": buck_res,
+        "token_identical": (kern_outs == jnp_outs and buck_outs == jnp_outs),
+        "retrace_reduction": round(
+            jnp_res["prefill_compiles"] /
+            max(buck_res["prefill_compiles"], 1), 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("serving_decode.jnp.tok_per_s", jnp_res["tok_per_s"],
+         f"prefill_compiles {jnp_res['prefill_compiles']}")
+    emit("serving_decode.kernel.tok_per_s", kern_res["tok_per_s"],
+         "Pallas paged-attention (interpret off-TPU: correctness lane, "
+         "not a speed claim)")
+    emit("serving_decode.bucketed.prefill_compiles",
+         buck_res["prefill_compiles"],
+         f"vs {jnp_res['prefill_compiles']} unbucketed over "
+         f"{wl.distinct_prompt_lens} distinct lengths")
+    emit("serving_decode.token_identical", report["token_identical"],
+         "kernel on/off and bucketing on/off must all match")
+    emit("serving_decode.report", out_path, "BENCH_decode.json artifact")
+
+
+# ----------------------------------------------------------------------
 # 8. Roofline report (deliverable g) — regenerated from results/dryrun.
 # ----------------------------------------------------------------------
 
@@ -456,6 +559,7 @@ BENCHES = {
     "llm_engine": bench_llm_engine,
     "serving_paged": bench_serving_paged,
     "serving_prefix": bench_serving_prefix,
+    "serving_decode": bench_serving_decode,
     "roofline": bench_roofline,
 }
 

@@ -14,6 +14,7 @@ import jax
 
 from repro.kernels import conv2d as _conv
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref as _ref
 from repro.kernels import rwkv6_scan as _rwkv
 
@@ -38,6 +39,13 @@ def kernels_enabled() -> bool:
         os.environ.get("REPRO_USE_KERNELS", "0") == "1"
 
 
+def kernel_path_active() -> bool:
+    """Would an op below dispatch to Pallas right now (TPU, or forced
+    interpret) rather than its jnp reference?  Gauges that claim "the
+    kernel ran" must check this, not just the model-side switch."""
+    return _use_kernel()
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
 def _fa_ref_jit(q, k, v, causal, window):
     return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
@@ -51,6 +59,24 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                    block_q=block_q, block_k=block_k,
                                    interpret=_platform() != "tpu")
     return _fa_ref_jit(q, k, v, causal, window)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def _pa_ref_jit(q, k_pool, v_pool, kpos_pool, block_table, pos, window):
+    return _ref.paged_attention_ref(q, k_pool, v_pool, kpos_pool,
+                                    block_table, pos, window=window)
+
+
+def paged_attention(q, k_pool, v_pool, kpos_pool, block_table, pos, *,
+                    window: int = 0):
+    """One-token paged decode: q (B,H,hd) against k/v pools
+    (NB,bs,KV,hd) through block_table (B,nb) -> (B,H,hd)."""
+    if _use_kernel():
+        return _pa.paged_attention(q, k_pool, v_pool, kpos_pool,
+                                   block_table, pos, window=window,
+                                   interpret=_platform() != "tpu")
+    return _pa_ref_jit(q, k_pool, v_pool, kpos_pool, block_table, pos,
+                       window)
 
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 32):

@@ -40,6 +40,34 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     return out.reshape(b, h, sq, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, kpos_pool, block_table, pos, *,
+                        window: int = 0):
+    """One-token decode against a block-paged KV pool, as a plain gather.
+
+    q (B,H,hd), k/v pools (NB,bs,KV,hd), kpos_pool (NB,bs) int32 absolute
+    positions (-1 = invalid lane), block_table (B,nb) int32 (0-padded),
+    pos (B,) int32 position of the query token -> (B,H,hd).  GQA:
+    H % KV == 0.  All-invalid rows return zeros (masked probs are zeroed
+    after the softmax, like the kernel's online accumulator).
+    """
+    b, h, hd = q.shape
+    nb = block_table.shape[1]
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    g = h // kv
+    k = k_pool[block_table].reshape(b, nb * bs, kv, hd).astype(jnp.float32)
+    v = v_pool[block_table].reshape(b, nb * bs, kv, hd).astype(jnp.float32)
+    kpos = kpos_pool[block_table].reshape(b, nb * bs)
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k) / math.sqrt(hd)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    if window:
+        valid = valid & (pos[:, None] - kpos < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    probs = jnp.where(valid[:, None, None, :], jax.nn.softmax(s, -1), 0.0)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, s0=None):
     """WKV6 recurrence.  r/k/v (B,H,S,hd), w (B,H,S,hd) decay in (0,1),
     u (H,hd) bonus.  Returns (out (B,H,S,hd), s_final (B,H,hd,hd)).

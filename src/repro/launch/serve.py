@@ -8,8 +8,14 @@ architecture (reduced variants on the CPU container).
 block-paged engine with admission-aware scheduling; ``--engine slot``
 runs the fixed-slot baseline.  ``--prefix-cache on`` (the default)
 shares previously computed prompt-prefix blocks across requests via the
-radix tree in ``serving/prefix_cache.py``.  Queue/pool/prefix-cache
-gauges are printed every ``--stats-every`` steps and at exit.
+radix tree in ``serving/prefix_cache.py``.  ``--decode-kernel on``
+routes paged decode attention through the Pallas paged-attention kernel
+(auto = on when kernels are globally enabled: TPU or
+``REPRO_USE_KERNELS=1``); ``--prefill-buckets`` pads prefill shapes to
+length buckets so mixed-length traffic compiles O(#buckets) prefill
+variants ("auto" = powers of two, "off" = exact shapes, or an explicit
+"8,16,64" list).  Queue/pool/prefix-cache/compile gauges are printed
+every ``--stats-every`` steps and at exit.
 """
 from __future__ import annotations
 
@@ -35,7 +41,9 @@ def _fmt_stats(stats: dict) -> str:
             f"/{stats.get('total_blocks', 0)} "
             f"occ={stats.get('pool_occupancy', 0.0):.2f} "
             f"preempt={stats.get('preemptions', 0)} "
-            f"finished={stats.get('finished', 0)}")
+            f"finished={stats.get('finished', 0)} "
+            f"compiles={stats.get('prefill_compiles', 0)}"
+            f"p/{stats.get('decode_compiles', 0)}d")
     if stats.get("prefix_cache"):
         line += (f" hit={stats.get('hit_rate', 0.0):.2f} "
                  f"cached={stats.get('cached_blocks', 0)} "
@@ -45,11 +53,17 @@ def _fmt_stats(stats: dict) -> str:
 
 def build_engine(args, model, params):
     if args.engine == "paged":
+        buckets = args.prefill_buckets
+        if buckets not in ("auto", "off"):
+            buckets = [int(b) for b in buckets.split(",")]
+        kernel = {"auto": None, "on": True, "off": False}[args.decode_kernel]
         return PagedLLMEngine(model, params, num_blocks=args.num_blocks,
                               block_size=args.block_size,
                               max_batch=args.max_batch,
                               max_len=args.cache_max,
-                              prefix_cache=args.prefix_cache == "on")
+                              prefix_cache=args.prefix_cache == "on",
+                              prefill_buckets=buckets,
+                              decode_kernel=kernel)
     return LLMEngine(model, params, num_slots=args.slots,
                      cache_max=args.cache_max)
 
@@ -67,6 +81,15 @@ def main():
     ap.add_argument("--prefix-cache", choices=("on", "off"), default="on",
                     help="radix-tree block reuse across shared prompt "
                          "prefixes (paged engine only)")
+    ap.add_argument("--decode-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="Pallas paged-attention decode kernel vs jnp "
+                         "block gather (auto: follow the global kernel "
+                         "switch; paged engine only)")
+    ap.add_argument("--prefill-buckets", default="auto",
+                    help="prefill length bucketing: auto (powers of two), "
+                         "off (exact shapes), or a comma list like "
+                         "8,16,64 (paged engine only)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)

@@ -170,16 +170,21 @@ class Model:
                                   jnp.dtype(dtype or self.cfg.dtype))
 
     def prefill_paged(self, params, batch, pools, block_table, start_pos, *,
-                      cache_max: int):
-        """Position-offset prefill of an uncached suffix (prefix-cache
-        hit path).  ``batch["tokens"]`` (B,S) holds only the suffix; its
-        first token sits at absolute position ``start_pos``.  The cached
-        prefix KV is read from ``pools`` through ``block_table`` (the
-        matched prefix blocks + any copy-on-write block; pool lanes at
-        positions ``>= start_pos`` are masked so a COW block's diverged
-        tail can never win).  -> (last-token logits, suffix caches sized
-        ``cache_max``) — splice the caches into the suffix's physical
-        blocks with ``write_prefill_blocks``."""
+                      cache_max: int, seq_len=None):
+        """Padding-masked position-offset prefill — the paged engine's
+        single prefill entry (fresh prompts, preempt-resume, and
+        prefix-cache suffixes).  ``batch["tokens"]`` (B,S) holds the
+        uncached suffix, right-padded up to a length bucket; its first
+        token sits at absolute position ``start_pos`` and ``seq_len``
+        (B,) int32 gives the valid length (None = all S valid).  The
+        cached prefix KV is read from ``pools`` through ``block_table``
+        (the matched prefix blocks + any copy-on-write block, 0-padded
+        to a block bucket; pool lanes at positions ``>= start_pos`` are
+        masked so a COW block's diverged tail can never win, and null
+        blocks never validate).  -> (last-VALID-token logits, suffix
+        caches sized ``cache_max`` whose padded lanes carry ``pos`` -1)
+        — splice the caches into the suffix's physical blocks with
+        ``write_prefill_blocks``."""
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(f"{cfg.name}: paged prefill unsupported "
@@ -191,22 +196,30 @@ class Model:
         x = self._embed_tokens(params, batch["tokens"], posc[None])
         x, caches = tf.stack_prefill_paged(params["stack"], cfg, x, posc,
                                            pools, block_table, start_pos,
-                                           cache_max)
+                                           cache_max, seq_len=seq_len)
         x = norm_apply(params["final_norm"], x, cfg.norm_kind)
-        logits = unembed_apply(params["embed"], cfg, x[:, -1:, :])
+        if seq_len is None:
+            last = x[:, -1:, :]
+        else:
+            idx = (jnp.asarray(seq_len, jnp.int32) - 1)[:, None, None]
+            last = jnp.take_along_axis(x, idx, axis=1)
+        logits = unembed_apply(params["embed"], cfg, last)
         return logits, caches
 
     def decode_step_paged(self, params, pools, block_table, tokens, pos,
-                          active):
+                          active, *, decode_kernel=None):
         """Paged one-token step.  tokens (B,1) int32, pos (B,) absolute
         position, block_table (B, nb) int32, active (B,) bool.
+        ``decode_kernel``: True = Pallas paged-attention kernel, False =
+        jnp block gather, None = follow the global kernel switch.
         -> (logits, new_pools)."""
         cfg = self.cfg
         posc = jnp.minimum(pos, cfg.max_position - 1) if (
             cfg.pos_kind == "learned") else pos
         x = self._embed_tokens(params, tokens, posc[:, None])
         x, pools = tf.stack_decode_paged(params["stack"], cfg, x, pools,
-                                         block_table, posc, active)
+                                         block_table, posc, active,
+                                         decode_kernel=decode_kernel)
         x = norm_apply(params["final_norm"], x, cfg.norm_kind)
         logits = unembed_apply(params["embed"], cfg, x)
         return logits, pools

@@ -432,7 +432,7 @@ def paged_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 
 def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
-                      *, kind: str):
+                      *, kind: str, decode_kernel: Optional[bool] = None):
     """One-token decode against a block-paged KV pool.
 
     x (B,1,D); ``pool`` is the *shared* layer pool (leaves lead with the
@@ -441,6 +441,15 @@ def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
     absolute position of the new token; ``active`` (B,) bool — inactive
     rows write ``pos = -1`` into the null block so their lanes never
     validate.  Returns (y (B,1,D), new_pool).
+
+    ``decode_kernel`` selects the attention read: True routes through the
+    Pallas paged-attention kernel (``kernels/paged_attention.py`` —
+    block-table-indexed loads, online softmax, no materialized gather),
+    False keeps the jnp block-gather below (the parity reference), None
+    follows ``_kernels_on()``.  Quantized pools always take the jnp path
+    (the kernel reads raw K/V lanes).  Inactive rows differ harmlessly
+    between the two (kernel: zeros; gather: uniform-prob garbage) — both
+    are discarded by the engine.
     """
     rope = cfg.pos_kind == "rope"
     hd = cfg.resolved_head_dim
@@ -472,6 +481,17 @@ def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
             v_new[:, 0].astype(pool["v"].dtype))
     new_pool["pos"] = pool["pos"].at[phys, off].set(pos_val)
 
+    use_kernel = _kernels_on() if decode_kernel is None else bool(decode_kernel)
+    if use_kernel and not cfg.kv_cache_quant:
+        from repro.kernels import ops as kernel_ops
+
+        window = cfg.sliding_window if kind == "attn_local" else 0
+        out = kernel_ops.paged_attention(
+            q[:, 0], new_pool["k"], new_pool["v"], new_pool["pos"],
+            block_table, pos.astype(jnp.int32), window=window)
+        y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+        return shard(y, "batch", "seq", "d_model"), new_pool
+
     # gather-based read: (B, nb, bs, ...) -> (B, nb*bs, ...) logical view
     kv = cfg.num_kv_heads
     if cfg.kv_cache_quant:
@@ -491,24 +511,36 @@ def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
 
 
 def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
-                       start_pos, *, cache_max: int):
-    """Position-offset suffix prefill against a block-paged pool.
+                       start_pos, *, cache_max: int, seq_len=None):
+    """Padding-masked position-offset prefill against a block-paged pool
+    — the ONE paged prefill entry point (fresh prompts, preempt-resume,
+    and prefix-cache suffixes all route here).
 
-    x (B,S,D) holds only a request's *uncached suffix*, whose first
-    token sits at absolute position ``start_pos``; ``positions`` (S,)
-    are the absolute positions ``start_pos + [0..S)``.  The prefix KV —
-    already computed by earlier requests sharing the prompt — is read
-    from ``pool`` through ``block_table`` (B, nb): the request's matched
-    prefix blocks plus, for a copy-on-write partial match, its private
-    copy of the donor block.  Pool lanes at positions ``>= start_pos``
-    are treated as invalid (a COW copy carries the donor's diverged tail
-    until the splice overwrites it — it must never win the mask), as are
-    ``pos = -1`` lanes.
+    x (B,S,D) holds a request's uncached suffix, whose first token sits
+    at absolute position ``start_pos``; ``positions`` (S,) are the
+    absolute positions ``start_pos + [0..S)``.  For a fresh prompt
+    ``start_pos`` is 0 and ``block_table`` is all null blocks (every
+    pool lane masked), which degenerates to a plain causal prefill.  The
+    prefix KV — already computed by earlier requests sharing the prompt
+    — is read from ``pool`` through ``block_table`` (B, nb): the
+    request's matched prefix blocks plus, for a copy-on-write partial
+    match, its private copy of the donor block.  Pool lanes at positions
+    ``>= start_pos`` are treated as invalid (a COW copy carries the
+    donor's diverged tail until the splice overwrites it — it must never
+    win the mask), as are ``pos = -1`` lanes.
+
+    ``seq_len`` (B,) int32 is the *valid* suffix length when ``x`` is
+    right-padded up to a length bucket (None = all S tokens valid).
+    Padded lanes are masked as keys (their cache ``pos`` is written -1,
+    so the engine's splice invalidates rather than publishes them) and
+    their query rows produce garbage that the caller discards — this is
+    what lets the engine compile O(#buckets) prefill variants instead of
+    O(#distinct suffix lengths).
 
     Returns (y (B,S,D), suffix cache sized ``cache_max``) — the cache
-    has the same layout as ``attn_prefill``'s, holding only the suffix
-    entries (absolute ``pos`` lanes), for the engine to splice into the
-    suffix's physical blocks via ``write_prefill_blocks``.
+    has the same layout as ``attn_prefill``'s, holding only the valid
+    suffix entries (absolute ``pos`` lanes), for the engine to splice
+    into the suffix's physical blocks via ``write_prefill_blocks``.
     """
     rope = cfg.pos_kind == "rope"
     hd = cfg.resolved_head_dim
@@ -532,9 +564,15 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
     ppos = jnp.where(ppos < start_pos, ppos, -1)   # kill diverged COW lanes
 
     qpos = _bcast_pos(positions, b, s)             # (B,S) absolute
+    if seq_len is not None:
+        lane_valid = jnp.arange(s, dtype=jnp.int32)[None, :] < \
+            jnp.asarray(seq_len, jnp.int32)[:, None]
+        kpos_suffix = jnp.where(lane_valid, qpos, -1)   # pad keys never win
+    else:
+        kpos_suffix = qpos
     k_all = jnp.concatenate([pk, k], axis=1)
     v_all = jnp.concatenate([pv, v], axis=1)
-    kpos_all = jnp.concatenate([ppos, qpos], axis=1)
+    kpos_all = jnp.concatenate([ppos, kpos_suffix], axis=1)
 
     h = q.shape[2]
     scale = 1.0 / math.sqrt(hd)
@@ -550,7 +588,7 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
     y = shard(y, "batch", "seq", "d_model")
 
     # suffix cache, same construction as attn_prefill's short-seq branch
-    entries = {"k": k, "v": v, "pos": qpos}
+    entries = {"k": k, "v": v, "pos": kpos_suffix}
     if cfg.kv_cache_quant:
         entries["k"], entries["k_s"] = _quantize_kv(k)
         entries["v"], entries["v_s"] = _quantize_kv(v)

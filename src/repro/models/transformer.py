@@ -294,14 +294,16 @@ def stack_decode(params, cfg: ModelConfig, x, caches, pos):
 
 
 def block_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
-                       *, kind: str, moe: bool):
+                       *, kind: str, moe: bool, decode_kernel=None):
     """One-token step against a block-paged pool (attention layers only —
-    SSM/RWKV states are O(1) per request, nothing to page)."""
+    SSM/RWKV states are O(1) per request, nothing to page).
+    ``decode_kernel``: Pallas kernel vs jnp gather (attn_decode_paged)."""
     if kind not in ("attn", "attn_local"):
         raise ValueError(f"paged decode: unsupported layer kind {kind!r}")
     h = norm_apply(p["norm1"], x, cfg.norm_kind)
     y, pool = attn.attn_decode_paged(p["mix"], cfg, h, pool, block_table,
-                                     pos, active, kind=kind)
+                                     pos, active, kind=kind,
+                                     decode_kernel=decode_kernel)
     x = x + y
     h = norm_apply(p["norm2"], x, cfg.norm_kind)
     y, _ = _ffn(p, cfg, h, moe)
@@ -309,7 +311,7 @@ def block_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
 
 
 def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
-                       active):
+                       active, decode_kernel=None):
     """-> (x, new_pools).  Same period scan as ``stack_decode``; the block
     table is shared by every layer (one allocation per request covers the
     whole stack — each layer owns its own physical pool, indexed by the
@@ -323,7 +325,8 @@ def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
             kind, moe = slot_sig(cfg, j)
             x, c = block_decode_paged(period_params[f"slot{j}"], cfg, x,
                                       period_pools[f"slot{j}"], block_table,
-                                      pos, active, kind=kind, moe=moe)
+                                      pos, active, kind=kind, moe=moe,
+                                      decode_kernel=decode_kernel)
             new[f"slot{j}"] = c
         return x, new
 
@@ -336,22 +339,25 @@ def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
         kind, moe = slot_sig(cfg, n_per * p + j)
         x, c = block_decode_paged(params["rem"][f"layer{j}"], cfg, x,
                                   pools["rem"][f"layer{j}"], block_table,
-                                  pos, active, kind=kind, moe=moe)
+                                  pos, active, kind=kind, moe=moe,
+                                  decode_kernel=decode_kernel)
         new_rem[f"layer{j}"] = c
     return x, {"periods": new_period_pools, "rem": new_rem}
 
 
 def block_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
-                        start_pos, *, kind: str, moe: bool, cache_max: int):
+                        start_pos, *, kind: str, moe: bool, cache_max: int,
+                        seq_len=None):
     """Suffix prefill for one layer against its paged pool: attends to
     the cached prefix (through ``block_table``) plus the suffix itself,
-    and emits the suffix's decode cache for the engine to splice."""
+    and emits the suffix's decode cache for the engine to splice.
+    ``seq_len`` (B,): valid lanes when x is padded to a length bucket."""
     if kind != "attn":
         raise ValueError(f"paged prefill: unsupported layer kind {kind!r}")
     h = norm_apply(p["norm1"], x, cfg.norm_kind)
     y, cache = attn.attn_prefill_paged(p["mix"], cfg, h, positions, pool,
                                        block_table, start_pos,
-                                       cache_max=cache_max)
+                                       cache_max=cache_max, seq_len=seq_len)
     x = x + y
     h = norm_apply(p["norm2"], x, cfg.norm_kind)
     y, _ = _ffn(p, cfg, h, moe)
@@ -359,7 +365,8 @@ def block_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
 
 
 def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
-                        block_table, start_pos, cache_max: int):
+                        block_table, start_pos, cache_max: int,
+                        seq_len=None):
     """-> (x, caches).  Same period scan as ``stack_decode_paged`` with
     the per-slot pools as scan xs; the per-layer suffix caches come out
     as scan ys, mirroring ``stack_prefill``'s cache layout."""
@@ -373,7 +380,8 @@ def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
             x, c = block_prefill_paged(period_params[f"slot{j}"], cfg, x,
                                        positions, period_pools[f"slot{j}"],
                                        block_table, start_pos, kind=kind,
-                                       moe=moe, cache_max=cache_max)
+                                       moe=moe, cache_max=cache_max,
+                                       seq_len=seq_len)
             caches[f"slot{j}"] = c
         return x, caches
 
@@ -387,7 +395,8 @@ def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
         x, c = block_prefill_paged(params["rem"][f"layer{j}"], cfg, x,
                                    positions, pools["rem"][f"layer{j}"],
                                    block_table, start_pos, kind=kind,
-                                   moe=moe, cache_max=cache_max)
+                                   moe=moe, cache_max=cache_max,
+                                   seq_len=seq_len)
         rem_caches[f"layer{j}"] = c
     return x, {"periods": period_caches, "rem": rem_caches}
 

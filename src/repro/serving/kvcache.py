@@ -167,15 +167,23 @@ class BlockAllocator:
 
 
 def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
-                         block_size: int, offset: int = 0) -> Any:
+                         block_size: int, offset: int = 0,
+                         valid_len: Optional[int] = None) -> Any:
     """Splice a (B=1) prefill cache into the request's physical blocks.
 
-    ``single_cache`` must come from ``Model.prefill`` (or
-    ``Model.prefill_paged``) with ``cache_max == len(block_ids) *
-    block_size - offset`` so every leaf's kv_len axis splits exactly into
-    the allocated blocks; unfilled lanes carry ``pos = -1`` from
-    ``init_cache`` and overwrite any stale lanes left by the blocks'
-    previous owner.
+    ``single_cache`` comes from ``Model.prefill`` (or
+    ``Model.prefill_paged``).  With ``valid_len=None`` (exact-size
+    contract) the cache's kv_len axis must equal ``len(block_ids) *
+    block_size - offset`` — any mismatch is a caller bug and asserts.
+    A caller whose cache is padded to a length bucket passes
+    ``valid_len`` (its count of VALID lanes, pre-``offset``); the axis
+    is then reconciled: a longer cache is truncated — the declared
+    valid lanes must fit the blocks, so only ``pos = -1`` padding lanes
+    can be cut — and a shorter one is extended with invalid lanes (-1
+    for integer leaves, 0 otherwise), which is safe because freed
+    blocks are invalidated on release, so a block handed out by the
+    allocator never carries stale valid positions.  Unfilled lanes
+    carry ``pos = -1`` and overwrite any lanes the splice does reach.
 
     ``offset`` supports copy-on-write resumption inside a partially
     matched block: the cache's first lane lands at in-block offset
@@ -185,6 +193,11 @@ def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
     """
     assert 0 <= offset < block_size, (offset, block_size)
     ids = jnp.asarray(block_ids, jnp.int32)
+    want = len(block_ids) * block_size
+    if valid_len is not None:
+        assert offset + valid_len <= want, \
+            f"valid lanes {offset}+{valid_len} overflow " \
+            f"{len(block_ids)} blocks x {block_size}"
 
     def write(pool_leaf, cache_leaf):
         ax = _batch_axis(pool_leaf.shape, cache_leaf.shape)
@@ -193,9 +206,18 @@ def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
             pad = [(0, 0)] * small.ndim
             pad[ax] = (offset, 0)
             small = jnp.pad(small, pad)            # pad lanes masked below
+        have = small.shape[ax]
+        assert valid_len is not None or have == want, \
+            (have, want, "pass valid_len for bucket-padded caches")
+        if have > want:
+            small = jax.lax.slice_in_dim(small, 0, want, axis=ax)
+        elif have < want:
+            pad = [(0, 0)] * small.ndim
+            pad[ax] = (0, want - have)
+            fill = -1 if jnp.issubdtype(small.dtype, jnp.integer) else 0
+            small = jnp.pad(small, pad, constant_values=fill)
         shp = small.shape
-        nb = shp[ax] // block_size
-        assert nb * block_size == shp[ax], (shp, ax, block_size)
+        nb = len(block_ids)
         small = small.reshape(shp[:ax] + (nb, block_size) + shp[ax + 1:])
         idx = (slice(None),) * ax + (ids,)
         small = small.astype(pool_leaf.dtype)

@@ -57,6 +57,11 @@ from repro.serving.store import ResultStore
 #:   cached_blocks     blocks currently held by the tree     (paged)
 #:   evictions / cow_copies
 #:                     prefix-cache lifetime counters        (paged)
+#:   prefill_compiles  distinct prefill shapes traced so far (bucket-hit
+#:                     counter: stays at O(#buckets) with bucketing on)
+#:   decode_compiles   distinct decode shapes traced so far
+#:   decode_kernel     1 when decode routes through the Pallas
+#:                     paged-attention kernel                (paged)
 
 
 # ---------------------------------------------------------------- Stratus
@@ -247,6 +252,8 @@ class LLMEngine:
         self.queue: List[GenRequest] = []
         self._rid = 0
         self.finished_count = 0
+        self._prefill_sigs: set = set()
+        self._decode_sigs: set = set()
 
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_max=cache_max))
@@ -276,6 +283,7 @@ class LLMEngine:
         req = self.queue.pop(0)
         slot = self.slots.alloc()
         batch = {"tokens": req.prompt[None, :]}
+        self._prefill_sigs.add(len(req.prompt))
         logits, cache1 = self._prefill(self.params, batch)
         self.cache = write_slot(self.cache, cache1, slot)
         self.pos[slot] = len(req.prompt)
@@ -291,6 +299,7 @@ class LLMEngine:
         pos = np.maximum(self.pos, 0).astype(np.int32)
         for s in live:
             tokens[s, 0] = self.active[s].out_tokens[-1]
+        self._decode_sigs.add(self.num_slots)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens),
                                           jnp.asarray(pos))
@@ -333,6 +342,8 @@ class LLMEngine:
             "preemptions": 0,
             "admissions": self._rid - len(self.queue),
             "finished": self.finished_count,
+            "prefill_compiles": len(self._prefill_sigs),
+            "decode_compiles": len(self._decode_sigs),
         }
 
 
@@ -368,16 +379,26 @@ class PagedLLMEngine:
     Occupancy/queue gauges are exposed via ``stats()`` for the balancer
     and the serve CLI (schema: module-level note above).
 
-    Known trade-off: prefill is jitted per (sequence length, cache_max)
-    pair, so preempt-resume retraces per distinct resume length —
-    length-bucketed prefill needs a padding mask in the model's prefill
-    path (ROADMAP open item).
+    Every prefill — fresh prompt, preempt-resume, prefix-cache suffix —
+    routes through the ONE padding-masked entry ``Model.prefill_paged``:
+    the suffix is right-padded up to a length bucket and the prefix
+    block table 0-padded up to a block bucket, so the engine compiles
+    O(#buckets) prefill variants instead of O(#distinct (suffix_len,
+    prefix_blocks) pairs).  ``prefill_buckets``: "auto" (powers of two
+    up to ``max_len``), "off" (exact shapes — one trace per distinct
+    shape, the pre-bucketing behaviour), or an explicit ascending list
+    of lengths.  ``decode_kernel``: True routes decode attention through
+    the Pallas paged-attention kernel (``kernels/paged_attention.py``),
+    False forces the jnp block gather, None follows the global kernel
+    switch (TPU / ``REPRO_USE_KERNELS``).
     """
 
     def __init__(self, model, params, num_blocks: int = 32,
                  block_size: int = 16, max_batch: int = 8,
                  max_len: int = 256, eos_id: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 prefill_buckets="auto",
+                 decode_kernel: Optional[bool] = None):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
                              "pure-attention decoder-only stack")
@@ -404,17 +425,59 @@ class PagedLLMEngine:
         self.peak_active = 0
         self.prefill_tokens = 0
         self.cow_copies = 0
+        self.decode_kernel = decode_kernel
+        self.buckets = self._resolve_buckets(prefill_buckets)
+        self._prefill_sigs: set = set()       # (padded_len, padded_blocks)
+        self._decode_sigs: set = set()
 
-        self._prefill = jax.jit(
-            lambda p, b, cm: model.prefill(p, b, cache_max=cm),
-            static_argnums=2)
-        # suffix prefill retraces per (suffix_len, prefix blocks,
-        # cache_max) triple — same length-bucketing caveat as _prefill.
-        self._prefill_suffix = jax.jit(
-            lambda p, b, pools, bt, sp, cm: model.prefill_paged(
-                p, b, pools, bt, sp, cache_max=cm),
-            static_argnums=5)
-        self._decode = jax.jit(model.decode_step_paged)
+        # the ONE prefill entry: padding-masked, position-offset, reads
+        # any cached prefix through the (bucket-padded) block table.
+        self._prefill_paged = jax.jit(
+            lambda p, b, pools, bt, sp, sl, cm: model.prefill_paged(
+                p, b, pools, bt, sp, seq_len=sl, cache_max=cm),
+            static_argnums=6)
+        self._decode = jax.jit(
+            lambda p, pools, bt, t, pos, act: model.decode_step_paged(
+                p, pools, bt, t, pos, act, decode_kernel=decode_kernel))
+
+    def _resolve_buckets(self, spec) -> Optional[List[int]]:
+        """"auto" / "off" / explicit ascending lengths -> bucket list
+        (None = bucketing off).  Auto is powers of two capped by a final
+        ``max_len`` bucket — no suffix can exceed it, so padding past it
+        would only burn compute and force truncation at the splice.
+        Explicit lists are clamped to ``max_len`` too; lengths past the
+        top bucket run at exact shape."""
+        if spec is None or spec == "off":
+            return None
+        if spec == "auto":
+            b, out = 8, []
+            while b < self.max_len:
+                out.append(b)
+                b *= 2
+            out.append(self.max_len)
+            return out
+        out = sorted({min(int(b), self.max_len) for b in spec})
+        if not out or min(out) < 1:
+            raise ValueError(f"bad prefill_buckets: {spec!r}")
+        return out
+
+    def _bucket_len(self, n: int) -> int:
+        """Smallest bucket >= n (exact length when off / past the top)."""
+        if self.buckets is not None:
+            for b in self.buckets:
+                if b >= n:
+                    return b
+        return n
+
+    def _bucket_blocks(self, n: int) -> int:
+        """Prefix-block-count bucket: next power of two (>= 1 so a fresh
+        prompt still carries a — fully masked — null-block table)."""
+        if self.buckets is None:
+            return max(n, 1)
+        m = 1
+        while m < n:
+            m *= 2
+        return m
 
     # ------------------------------------------------------------ client
     def submit(self, prompt: np.ndarray, max_new: int = 16,
@@ -462,7 +525,24 @@ class PagedLLMEngine:
             "cached_blocks": pc.cached_blocks if pc else 0,
             "evictions": pc.evictions if pc else 0,
             "cow_copies": self.cow_copies,
+            "prefill_compiles": len(self._prefill_sigs),
+            "decode_compiles": len(self._decode_sigs),
+            "decode_kernel": int(self._decode_kernel_on()),
         }
+
+    def _decode_kernel_on(self) -> bool:
+        """Is decode attention ACTUALLY running through the Pallas
+        kernel?  Requesting it (``decode_kernel=True`` / the global
+        switch) is not enough: quantized pools always take the jnp path,
+        and off-TPU the ops layer falls back to the jnp reference unless
+        interpret mode is forced — the gauge must not claim a kernel
+        that never dispatched."""
+        from repro.kernels.ops import kernel_path_active, kernels_enabled
+
+        requested = bool(self.decode_kernel) if \
+            self.decode_kernel is not None else kernels_enabled()
+        return requested and not self.model.cfg.kv_cache_quant and \
+            kernel_path_active()
 
     # ------------------------------------------------------------ sched
     def _free_row(self) -> Optional[int]:
@@ -581,28 +661,32 @@ class PagedLLMEngine:
         assert blocks is not None, "admission check guarantees capacity"
         row = self._free_row()
         start = k * bs + j
-        if start:
-            if j:   # copy-on-write: private copy of the donor block
-                self.pools = copy_blocks(self.pools, [match.partial_block],
-                                         [blocks[0]])
-                self.cow_copies += 1
-                self.allocator.free([match.partial_block])   # drop COW hold
-            suffix = np.ascontiguousarray(seq[start:])
-            prefix_table = match.blocks + (blocks[:1] if j else [])
-            bt = np.asarray(prefix_table, np.int32)[None, :]
-            logits, cache1 = self._prefill_suffix(
-                self.params, {"tokens": suffix[None, :]}, self.pools,
-                jnp.asarray(bt), jnp.int32(start),
-                len(blocks) * bs - j)
-            self.pools = write_prefill_blocks(self.pools, cache1, blocks,
-                                              bs, offset=j)
-            self.prefill_tokens += len(suffix)
-        else:
-            logits, cache1 = self._prefill(self.params,
-                                           {"tokens": seq[None, :]},
-                                           nb_total * bs)
-            self.pools = write_prefill_blocks(self.pools, cache1, blocks, bs)
-            self.prefill_tokens += len(seq)
+        if j:       # copy-on-write: private copy of the donor block
+            self.pools = copy_blocks(self.pools, [match.partial_block],
+                                     [blocks[0]])
+            self.cow_copies += 1
+            self.allocator.free([match.partial_block])       # drop COW hold
+        # bucketed, padding-masked prefill of the uncached suffix (the
+        # whole sequence when nothing matched): tokens padded to a length
+        # bucket, prefix table 0-padded (null blocks never validate) to a
+        # block bucket — the trace signature is (bucket, block bucket),
+        # not (exact suffix length, exact prefix blocks).
+        suffix = np.ascontiguousarray(seq[start:])
+        s_pad = self._bucket_len(len(suffix))
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :len(suffix)] = suffix
+        prefix_table = match.blocks + (blocks[:1] if j else [])
+        nb_pad = self._bucket_blocks(len(prefix_table))
+        bt = np.zeros((1, nb_pad), np.int32)
+        bt[0, :len(prefix_table)] = prefix_table
+        self._prefill_sigs.add((s_pad, nb_pad))
+        logits, cache1 = self._prefill_paged(
+            self.params, {"tokens": toks}, self.pools, jnp.asarray(bt),
+            jnp.int32(start), jnp.asarray([len(suffix)], jnp.int32), s_pad)
+        self.pools = write_prefill_blocks(self.pools, cache1, blocks,
+                                          bs, offset=j,
+                                          valid_len=len(suffix))
+        self.prefill_tokens += len(suffix)
         all_blocks = match.blocks + blocks
         if self.prefix_cache is not None:
             # publish this request's full blocks (matched ones dedupe)
@@ -658,6 +742,7 @@ class PagedLLMEngine:
             tokens[row, 0] = req.out_tokens[-1]
             pos[row] = self.pos[row]
             active_mask[row] = True
+        self._decode_sigs.add((self.max_batch, self.nb_max))
         logits, self.pools = self._decode(
             self.params, self.pools, jnp.asarray(self.block_table),
             jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active_mask))

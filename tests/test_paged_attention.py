@@ -1,0 +1,275 @@
+"""Unified bucketed paged-attention execution layer tests.
+
+Three layers, bottom-up: (1) the Pallas paged-attention decode kernel
+(interpret mode) against the jnp gather oracle over GQA/MQA, ragged tail
+blocks, null-block padding, and sliding windows; (2) the padding-masked
+bucketed prefill — token identity vs exact-shape prefill, and the
+retrace-regression guarantee (traces <= #buckets across many distinct
+lengths, asserted against jax's real jit cache, not our own counter);
+(3) end-to-end engine identity with the decode kernel on vs off.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention
+from repro.models.api import Model
+from repro.serving.loadgen import mixed_length_workload
+from repro.serving.server import PagedLLMEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ kernel parity
+
+
+def _random_paged_case(rng, b, h, kv, hd, nb_pool, bs, nb, dtype=jnp.float32):
+    """Pools with per-request block runs of random length: ragged tail
+    lanes stay pos=-1, unused table columns pad with the null block."""
+    k_pool = jnp.asarray(rng.normal(size=(nb_pool, bs, kv, hd)), dtype)
+    v_pool = jnp.asarray(rng.normal(size=(nb_pool, bs, kv, hd)), dtype)
+    pos_pool = np.full((nb_pool, bs), -1, np.int32)
+    bt = np.zeros((b, nb), np.int32)
+    pos = np.zeros((b,), np.int32)
+    phys = list(range(1, nb_pool))
+    rng.shuffle(phys)
+    for i in range(b):
+        n_used = int(rng.integers(1, nb + 1))
+        length = int(rng.integers((n_used - 1) * bs + 1, n_used * bs + 1))
+        for j in range(n_used):
+            blk = phys.pop()
+            bt[i, j] = blk
+            lanes = np.arange(bs) + j * bs
+            pos_pool[blk, lanes < length] = lanes[lanes < length]
+        pos[i] = length - 1
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), dtype)
+    return (q, k_pool, v_pool, jnp.asarray(pos_pool), jnp.asarray(bt),
+            jnp.asarray(pos))
+
+
+PA_SHAPES = [
+    # (B, H, KV, hd, pool blocks, block size, table cols)
+    (2, 4, 2, 32, 9, 8, 3),       # GQA 2:1
+    (1, 8, 1, 64, 5, 16, 2),      # MQA
+    (3, 4, 4, 16, 17, 4, 5),      # MHA, many small blocks
+    (2, 8, 2, 128, 7, 8, 3),      # lane-aligned head_dim
+]
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("shape", PA_SHAPES)
+@pytest.mark.parametrize("window", [0, 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel_vs_ref(shape, window, dtype):
+    rng = np.random.default_rng(sum(shape) + window)
+    args = _random_paged_case(rng, *shape, dtype=dtype)
+    out = paged_attention(*args, window=window, interpret=True)
+    expect = ref.paged_attention_ref(*args, window=window)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol)
+
+
+@pytest.mark.kernels
+def test_paged_attention_all_null_row_is_zero():
+    """A row whose table is all null blocks (inactive request) must come
+    out exactly zero — masked lanes contribute nothing to the online
+    accumulator."""
+    rng = np.random.default_rng(0)
+    q, k_pool, v_pool, pos_pool, bt, pos = _random_paged_case(
+        rng, 2, 4, 2, 32, 9, 8, 3)
+    bt = bt.at[1, :].set(0)
+    out = paged_attention(q, k_pool, v_pool, pos_pool, bt, pos,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    expect = ref.paged_attention_ref(q, k_pool, v_pool, pos_pool, bt, pos)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(expect[0]),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.kernels
+def test_ops_dispatch_paged_attention(monkeypatch):
+    """ops.paged_attention: ref on plain CPU, Pallas under forced
+    interpret — both matching the oracle."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(3)
+    args = _random_paged_case(rng, 2, 4, 2, 32, 9, 8, 3)
+    expect = ref.paged_attention_ref(*args)
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    np.testing.assert_allclose(np.asarray(ops.paged_attention(*args)),
+                               np.asarray(expect), atol=1e-5)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    np.testing.assert_allclose(np.asarray(ops.paged_attention(*args)),
+                               np.asarray(expect), atol=2e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------ engine fixtures
+
+
+@pytest.fixture(scope="module")
+def qwen_model(rng_key):
+    cfg = reduced_cfg("qwen3-0.6b")
+    model = Model(cfg)
+    return model, model.init(rng_key)
+
+
+def _drain(engine, max_steps=2000):
+    outs = {}
+    for _ in range(max_steps):
+        for r in engine.step():
+            outs[r.rid] = list(r.out_tokens)
+        if engine.idle:
+            break
+    assert engine.idle
+    return outs
+
+
+def _drive(model, params, prompts, max_news=None, **kw):
+    engine = PagedLLMEngine(model, params, num_blocks=64, block_size=8,
+                            max_batch=8, max_len=96, **kw)
+    max_news = max_news or [6] * len(prompts)
+    for p, n in zip(prompts, max_news):
+        engine.submit(p, max_new=n)
+    return engine, _drain(engine)
+
+
+# ------------------------------------------------- bucketed prefill identity
+
+
+def test_bucketed_prefill_token_identity(qwen_model):
+    """Padding-masked bucketed prefill must emit exactly the tokens the
+    exact-shape path emits, on a workload with many distinct lengths."""
+    model, params = qwen_model
+    wl = mixed_length_workload(num_requests=10, vocab_size=model.cfg.vocab_size,
+                               min_len=4, max_len=40, min_new=2, max_new=8,
+                               seed=0)
+    assert wl.distinct_prompt_lens >= 5
+    _, exact = _drive(model, params, wl.prompts, wl.max_news,
+                      prefill_buckets="off")
+    _, bucketed = _drive(model, params, wl.prompts, wl.max_news,
+                         prefill_buckets="auto")
+    assert bucketed == exact
+
+
+def test_bucketed_prefill_with_prefix_cache_identity(qwen_model):
+    """Bucketing composes with the radix prefix cache: suffix prefills
+    land on bucketed shapes (block-table columns padded with null
+    blocks) without changing a single output token."""
+    model, params = qwen_model
+    cfg = model.cfg
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(1, cfg.vocab_size, 3 + i)
+                               .astype(np.int32)])
+               for i in range(5)]
+    _, exact = _drive(model, params, prompts, prefill_buckets="off",
+                      prefix_cache=True)
+    eng, bucketed = _drive(model, params, prompts, prefill_buckets="auto",
+                           prefix_cache=True)
+    assert bucketed == exact
+    assert eng.stats()["hit_rate"] > 0          # the cache actually matched
+
+
+# ------------------------------------------------------- retrace regression
+
+
+def test_prefill_retraces_bounded_by_buckets(qwen_model):
+    """>= 8 distinct prompt lengths must compile at most #buckets prefill
+    variants — asserted against jax's jit cache, with the stats() counter
+    required to agree (so the gauge can be trusted in production)."""
+    model, params = qwen_model
+    cfg = model.cfg
+    rng = np.random.default_rng(1)
+    lengths = [5, 7, 9, 11, 14, 17, 21, 26, 31]
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+
+    exact_eng, _ = _drive(model, params, prompts, prefill_buckets="off")
+    assert exact_eng._prefill_paged._cache_size() == len(lengths)
+    assert exact_eng.stats()["prefill_compiles"] == len(lengths)
+
+    eng, _ = _drive(model, params, prompts, prefill_buckets="auto")
+    n_buckets = len({eng._bucket_len(n) for n in lengths})
+    assert n_buckets < len(lengths)
+    assert eng._prefill_paged._cache_size() <= n_buckets
+    assert eng.stats()["prefill_compiles"] == \
+        eng._prefill_paged._cache_size()
+    assert eng.stats()["decode_compiles"] == 1
+
+
+def test_explicit_and_off_bucket_specs(qwen_model):
+    model, params = qwen_model
+    eng = PagedLLMEngine(model, params, num_blocks=32, block_size=8,
+                         max_batch=4, max_len=64, prefill_buckets=[16, 48])
+    assert eng._bucket_len(3) == 16 and eng._bucket_len(17) == 48
+    assert eng._bucket_len(50) == 50            # past the top: exact
+    auto = PagedLLMEngine(model, params, num_blocks=32, block_size=8,
+                          max_batch=4, max_len=96)
+    assert auto.buckets == [8, 16, 32, 64, 96]  # capped at max_len
+    assert auto._bucket_len(70) == 96
+    off = PagedLLMEngine(model, params, num_blocks=32, block_size=8,
+                         max_batch=4, max_len=64, prefill_buckets="off")
+    assert off._bucket_len(13) == 13 and off._bucket_blocks(0) == 1
+    with pytest.raises(ValueError, match="prefill_buckets"):
+        PagedLLMEngine(model, params, num_blocks=32, block_size=8,
+                       max_batch=4, max_len=64, prefill_buckets=[])
+
+
+# ------------------------------------------------- decode kernel end-to-end
+
+
+def test_decode_kernel_token_identity(qwen_model, monkeypatch):
+    """Pallas decode kernel (interpret) vs jnp gather: token-identical
+    through the engine, including across preempt-resume."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    model, params = qwen_model
+    cfg = model.cfg
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, 6 + 2 * i).astype(np.int32)
+               for i in range(4)]
+    _, off = _drive(model, params, prompts, decode_kernel=False)
+    eng, on = _drive(model, params, prompts, decode_kernel=True)
+    assert on == off
+    assert eng.stats()["decode_kernel"] == 1
+
+    # tight pool: the kernel path must survive preempt-and-requeue too
+    def tight(dk):
+        e = PagedLLMEngine(model, params, num_blocks=10, block_size=4,
+                           max_batch=8, max_len=64, decode_kernel=dk)
+        for p in prompts:
+            e.submit(p, max_new=10)
+        return e, _drain(e)
+
+    e_off, t_off = tight(False)
+    e_on, t_on = tight(True)
+    assert e_on.preemptions > 0
+    assert t_on == t_off
+
+
+def test_stats_schema_has_compile_gauges(qwen_model):
+    """Both engines expose the bucket-hit counters; _fmt_stats renders
+    dicts with AND without them (old snapshots stay printable)."""
+    from repro.launch.serve import _fmt_stats
+    from repro.serving.server import LLMEngine
+
+    model, params = qwen_model
+    slot = LLMEngine(model, params, num_slots=2, cache_max=32)
+    slot.submit(np.arange(1, 9, dtype=np.int32), max_new=2)
+    _drain(slot, max_steps=20)
+    s = slot.stats()
+    assert s["prefill_compiles"] == 1 and s["decode_compiles"] == 1
+
+    paged = PagedLLMEngine(model, params, num_blocks=16, block_size=8,
+                           max_batch=4, max_len=64)
+    assert paged.stats()["prefill_compiles"] == 0
+    line = _fmt_stats(paged.stats())
+    assert "compiles=0p/0d" in line
+    assert "compiles" in _fmt_stats(s)
+    # pre-PR-3 snapshot: no compile keys — still renders
+    assert "compiles=0p/0d" in _fmt_stats({"engine": "paged"})
