@@ -1,0 +1,86 @@
+"""CI bench-gate checker: one invocation per lane, one spec per file.
+
+Usage::
+
+    python benchmarks/check_gates.py \
+        BENCH_serving.json:token_identical \
+        BENCH_prefix.json:token_identical,prefill_token_reduction>=2 \
+        BENCH_batching.json:token_identical,speedup_vs_slot>=1.0
+
+Each spec is ``FILE:EXPR[,EXPR...]``.  An EXPR is either a bare
+(dotted) key — gate passes iff the value is truthy — or
+``KEY <op> NUMBER`` with ``<op>`` one of ``>= <= == > <``.  Dotted keys
+descend into nested objects (``paged.tok_per_s``).  Every gate prints a
+``PASS``/``FAIL`` line; the process exits nonzero if any gate fails (or
+a file/key is missing — a silently absent report must fail the lane,
+not skip it).  Adding a future gate is a one-line change in ci.yml.
+"""
+from __future__ import annotations
+
+import json
+import operator
+import re
+import sys
+
+_OPS = {">=": operator.ge, "<=": operator.le, "==": operator.eq,
+        ">": operator.gt, "<": operator.lt}
+_EXPR = re.compile(r"^\s*([\w.]+)\s*(?:(>=|<=|==|>|<)\s*(-?[\d.]+))?\s*$")
+
+
+def _lookup(report: dict, dotted: str):
+    node = report
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(dotted)
+        node = node[part]
+    return node
+
+
+def check(spec: str) -> list:
+    """-> [(gate_label, passed, detail), ...] for one FILE:EXPRS spec."""
+    path, _, exprs = spec.partition(":")
+    if not exprs:
+        return [(path, False, "bad spec: expected FILE:EXPR[,EXPR...]")]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, ValueError) as e:
+        return [(f"{path}:{e2}", False, f"unreadable report: {e}")
+                for e2 in exprs.split(",")]
+    out = []
+    for expr in exprs.split(","):
+        m = _EXPR.match(expr)
+        if not m:
+            out.append((f"{path}:{expr}", False, "unparseable expr"))
+            continue
+        key, op, num = m.groups()
+        try:
+            val = _lookup(report, key)
+        except KeyError:
+            out.append((f"{path}:{expr}", False, "key missing"))
+            continue
+        if op is None:
+            out.append((f"{path}:{key}", bool(val), f"value {val!r}"))
+        else:
+            ok = _OPS[op](float(val), float(num))
+            out.append((f"{path}:{key}{op}{num}", ok, f"value {val}"))
+    return out
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_gates.py FILE:EXPR[,EXPR...] ...",
+              file=sys.stderr)
+        return 2
+    failed = 0
+    for spec in argv:
+        for label, ok, detail in check(spec):
+            print(f"{'PASS' if ok else 'FAIL'} {label} ({detail})")
+            failed += 0 if ok else 1
+    if failed:
+        print(f"{failed} gate(s) failed", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

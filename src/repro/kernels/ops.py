@@ -79,6 +79,27 @@ def paged_attention(q, k_pool, v_pool, kpos_pool, block_table, pos, *,
                        window)
 
 
+@jax.jit
+def _pp_ref_jit(q, k, v, kpos, qpos):
+    return _ref.paged_prefill_ref(q, k, v, kpos, qpos)
+
+
+def paged_prefill(q, k, v, kpos, qpos):
+    """Ragged-batch chunked-prefill attention: q (B,S,H,hd) against
+    assembled keys k/v (B,L,KV,hd) with absolute key/query positions
+    kpos (B,L) / qpos (B,S) -> (B,S,H,hd).  Per-row raggedness (chunk
+    length, prefix size, position offset) lives entirely in the position
+    arrays — see ``ref.paged_prefill_ref`` for the semantics.
+
+    No Pallas kernel exists for this op yet: the decode kernel's
+    online-softmax block loop extends to S>1 query lanes but hasn't been
+    written (ROADMAP), so BOTH dispatch arms run the jnp reference.  The
+    call sites are already kernel-shaped — when the kernel lands, only
+    this function changes.
+    """
+    return _pp_ref_jit(q, k, v, kpos, qpos)
+
+
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 32):
     """Chunked WKV6; returns (out, final_state)."""
     if _use_kernel():

@@ -68,6 +68,41 @@ def paged_attention_ref(q, k_pool, v_pool, kpos_pool, block_table, pos, *,
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def paged_prefill_ref(q, k, v, kpos, qpos):
+    """Ragged-batch chunked-prefill attention — the continuous-batching
+    read: every row is one request's prefill chunk, with per-row chunk
+    lengths, block tables, and position offsets all encoded in the two
+    position arrays (no per-row shapes, so one trace serves the whole
+    ragged batch).
+
+    q (B,S,H,hd) chunk queries; k/v (B,L,KV,hd) keys = the row's
+    pool-gathered prefix followed by the chunk itself; kpos (B,L) int32
+    absolute key positions (-1 = invalid lane: null blocks, bucket
+    padding, not-yet-written lanes); qpos (B,S) int32 absolute query
+    positions.  Causality is over absolute positions: key lane s is
+    visible to query lane t iff ``kpos[s] >= 0 and kpos[s] <= qpos[t]``.
+    GQA: H % KV == 0.  Scores in fp32; the value contraction runs in
+    v.dtype (matching the slot-engine prefill numerics so chunked and
+    whole-prompt paths stay token-identical).  -> (B,S,H,hd).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    sc = jnp.einsum("bqhd,bshd->bhqs", q, k) * (1.0 / math.sqrt(hd))
+    sc = sc.astype(jnp.float32)
+    kp = kpos[:, None, None, :]
+    qp = qpos[:, None, :, None]
+    mask = (kp >= 0) & (kp <= qp)
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = jnp.max(sc, -1, keepdims=True)
+    e = jnp.exp(sc - jax.lax.stop_gradient(m))
+    z = jnp.sum(e, -1, keepdims=True)
+    probs = (e / jnp.maximum(z, 1e-30)).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, s0=None):
     """WKV6 recurrence.  r/k/v (B,H,S,hd), w (B,H,S,hd) decay in (0,1),
     u (H,hd) bonus.  Returns (out (B,H,S,hd), s_final (B,H,hd,hd)).

@@ -14,8 +14,13 @@ routes paged decode attention through the Pallas paged-attention kernel
 ``REPRO_USE_KERNELS=1``); ``--prefill-buckets`` pads prefill shapes to
 length buckets so mixed-length traffic compiles O(#buckets) prefill
 variants ("auto" = powers of two, "off" = exact shapes, or an explicit
-"8,16,64" list).  Queue/pool/prefix-cache/compile gauges are printed
-every ``--stats-every`` steps and at exit.
+"8,16,64" list).  ``--scheduler continuous`` (default) admits every
+admissible request per step and drains prompt prefills as
+``--prefill-chunk``-token chunks under a ``--step-token-budget`` cap so
+running decodes keep advancing every step; ``--scheduler serial`` is
+the one-admission-per-step whole-prompt baseline.
+Queue/pool/prefix-cache/compile gauges are printed every
+``--stats-every`` steps and at exit.
 """
 from __future__ import annotations
 
@@ -63,7 +68,10 @@ def build_engine(args, model, params):
                               max_len=args.cache_max,
                               prefix_cache=args.prefix_cache == "on",
                               prefill_buckets=buckets,
-                              decode_kernel=kernel)
+                              decode_kernel=kernel,
+                              scheduler=args.scheduler,
+                              prefill_chunk=args.prefill_chunk,
+                              step_token_budget=args.step_token_budget)
     return LLMEngine(model, params, num_slots=args.slots,
                      cache_max=args.cache_max)
 
@@ -90,6 +98,17 @@ def main():
                     help="prefill length bucketing: auto (powers of two), "
                          "off (exact shapes), or a comma list like "
                          "8,16,64 (paged engine only)")
+    ap.add_argument("--scheduler", choices=("continuous", "serial"),
+                    default="continuous",
+                    help="continuous: multi-admission + chunked prefill "
+                         "interleaved with decode; serial: one whole-"
+                         "prompt admission per step (paged engine only)")
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="prompt tokens per prefill chunk (snapped to a "
+                         "length bucket and capped by --cache-max)")
+    ap.add_argument("--step-token-budget", type=int, default=None,
+                    help="max prompt tokens prefilled per engine step "
+                         "(default: one chunk)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)

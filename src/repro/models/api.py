@@ -172,28 +172,37 @@ class Model:
     def prefill_paged(self, params, batch, pools, block_table, start_pos, *,
                       cache_max: int, seq_len=None):
         """Padding-masked position-offset prefill — the paged engine's
-        single prefill entry (fresh prompts, preempt-resume, and
-        prefix-cache suffixes).  ``batch["tokens"]`` (B,S) holds the
-        uncached suffix, right-padded up to a length bucket; its first
-        token sits at absolute position ``start_pos`` and ``seq_len``
-        (B,) int32 gives the valid length (None = all S valid).  The
-        cached prefix KV is read from ``pools`` through ``block_table``
-        (the matched prefix blocks + any copy-on-write block, 0-padded
-        to a block bucket; pool lanes at positions ``>= start_pos`` are
-        masked so a COW block's diverged tail can never win, and null
-        blocks never validate).  -> (last-VALID-token logits, suffix
-        caches sized ``cache_max`` whose padded lanes carry ``pos`` -1)
-        — splice the caches into the suffix's physical blocks with
-        ``write_prefill_blocks``."""
+        single prefill entry (fresh prompts, preempt-resume, prefix-cache
+        suffixes, and continuous-batching prefill chunks).
+        ``batch["tokens"]`` (B,S) holds a ragged batch of uncached
+        suffix chunks, right-padded up to a length bucket; row i's first
+        token sits at absolute position ``start_pos`` (scalar, or (B,)
+        int32 with one cursor per row) and ``seq_len`` (B,) int32 gives
+        each row's valid length (None = all S valid).  The cached prefix
+        KV — earlier chunks of the same prompt and/or prefix-cache
+        matches — is read from ``pools`` through ``block_table``
+        (0-padded to a block bucket; pool lanes at positions ``>=
+        start_pos`` are masked per row so a COW block's diverged tail or
+        a not-yet-written own-block lane can never win, and null blocks
+        never validate).  -> (last-VALID-token logits, suffix caches
+        sized ``cache_max`` whose padded lanes carry ``pos`` -1) —
+        splice the caches into each row's physical blocks with one
+        batched ``write_chunk_tokens`` scatter (single request:
+        ``write_prefill_blocks``)."""
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(f"{cfg.name}: paged prefill unsupported "
                              "(needs a pure-attention decoder-only stack)")
         s = batch["tokens"].shape[1]
-        positions = start_pos + jnp.arange(s, dtype=jnp.int32)
+        sp = jnp.asarray(start_pos, jnp.int32)
+        # scalar cursor -> (S,); per-row (B,) cursors -> (B,S)
+        positions = jnp.expand_dims(sp, -1) + jnp.arange(s, dtype=jnp.int32)
+        positions = positions if positions.ndim == 2 else \
+            positions.reshape(s)
         posc = jnp.minimum(positions, cfg.max_position - 1) if (
             cfg.pos_kind == "learned") else positions
-        x = self._embed_tokens(params, batch["tokens"], posc[None])
+        x = self._embed_tokens(params, batch["tokens"],
+                               posc if posc.ndim == 2 else posc[None])
         x, caches = tf.stack_prefill_paged(params["stack"], cfg, x, posc,
                                            pools, block_table, start_pos,
                                            cache_max, seq_len=seq_len)

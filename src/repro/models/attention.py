@@ -516,18 +516,20 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
     — the ONE paged prefill entry point (fresh prompts, preempt-resume,
     and prefix-cache suffixes all route here).
 
-    x (B,S,D) holds a request's uncached suffix, whose first token sits
-    at absolute position ``start_pos``; ``positions`` (S,) are the
-    absolute positions ``start_pos + [0..S)``.  For a fresh prompt
-    ``start_pos`` is 0 and ``block_table`` is all null blocks (every
-    pool lane masked), which degenerates to a plain causal prefill.  The
-    prefix KV — already computed by earlier requests sharing the prompt
-    — is read from ``pool`` through ``block_table`` (B, nb): the
-    request's matched prefix blocks plus, for a copy-on-write partial
-    match, its private copy of the donor block.  Pool lanes at positions
-    ``>= start_pos`` are treated as invalid (a COW copy carries the
-    donor's diverged tail until the splice overwrites it — it must never
-    win the mask), as are ``pos = -1`` lanes.
+    x (B,S,D) holds a ragged batch of uncached suffix *chunks* — one
+    row per request, each row's first token at absolute position
+    ``start_pos`` (scalar, or (B,) for per-row offsets under continuous
+    batching); ``positions`` are the absolute positions ``start_pos +
+    [0..S)``, shaped (S,) for a scalar offset or (B,S) per row.  For a
+    fresh prompt ``start_pos`` is 0 and ``block_table`` is all null
+    blocks (every pool lane masked), which degenerates to a plain causal
+    prefill.  The prefix KV — earlier chunks of the same prompt, blocks
+    matched from the prefix cache, or both — is read from ``pool``
+    through ``block_table`` (B, nb).  Pool lanes at positions ``>=
+    start_pos`` (per row) are treated as invalid, as are ``pos = -1``
+    lanes: that one guard covers both a COW copy's diverged donor tail
+    and a chunked prefill's not-yet-written own-block lanes, since a
+    row's pool can only hold valid entries below its chunk cursor.
 
     ``seq_len`` (B,) int32 is the *valid* suffix length when ``x`` is
     right-padded up to a length bucket (None = all S tokens valid).
@@ -561,7 +563,10 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
     pk = pk.reshape(b, nb * bs, kv, hd)
     pv = pv.reshape(b, nb * bs, kv, hd)
     ppos = pool["pos"][block_table].reshape(b, nb * bs)
-    ppos = jnp.where(ppos < start_pos, ppos, -1)   # kill diverged COW lanes
+    # per-row cursor guard: lanes at/past the row's start are invalid
+    # (diverged COW tails AND own-block lanes a later chunk will write)
+    sp = jnp.expand_dims(jnp.asarray(start_pos, jnp.int32), -1)  # (B,1)|(1,)
+    ppos = jnp.where(ppos < sp, ppos, -1)
 
     qpos = _bcast_pos(positions, b, s)             # (B,S) absolute
     if seq_len is not None:
@@ -574,16 +579,10 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
     v_all = jnp.concatenate([pv, v], axis=1)
     kpos_all = jnp.concatenate([ppos, kpos_suffix], axis=1)
 
-    h = q.shape[2]
-    scale = 1.0 / math.sqrt(hd)
-    k_rep = _repeat_kv(k_all, h, seq_name="kv_len")
-    v_rep = _repeat_kv(v_all, h, seq_name="kv_len")
-    sc = _scores(q, k_rep, spec=("batch", None, "seq", "kv_len")) * scale
-    kp = kpos_all[:, None, None, :]
-    qp = qpos[:, None, :, None]
-    mask = (kp >= 0) & (kp <= qp)                  # causal over abs positions
-    probs = _softmax(sc, mask).astype(v.dtype)
-    out = _attn_out(probs, v_rep)                  # (B,S,H,hd)
+    from repro.kernels import ops as kernel_ops
+
+    out = kernel_ops.paged_prefill(q, k_all, v_all, kpos_all, qpos)
+    out = shard(out, "batch", "seq", "heads", "head_dim")
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     y = shard(y, "batch", "seq", "d_model")
 

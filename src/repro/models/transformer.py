@@ -348,10 +348,12 @@ def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
 def block_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
                         start_pos, *, kind: str, moe: bool, cache_max: int,
                         seq_len=None):
-    """Suffix prefill for one layer against its paged pool: attends to
-    the cached prefix (through ``block_table``) plus the suffix itself,
-    and emits the suffix's decode cache for the engine to splice.
-    ``seq_len`` (B,): valid lanes when x is padded to a length bucket."""
+    """Suffix-chunk prefill for one layer against its paged pool: each
+    row attends to its cached prefix (through ``block_table`` — earlier
+    chunks and/or prefix-cache matches) plus the chunk itself, and emits
+    the chunk's decode cache for the engine to splice.  Ragged batches:
+    ``start_pos`` may be (B,) per-row cursors with ``positions`` (B,S);
+    ``seq_len`` (B,) gives valid lanes when x is padded to a bucket."""
     if kind != "attn":
         raise ValueError(f"paged prefill: unsupported layer kind {kind!r}")
     h = norm_apply(p["norm1"], x, cfg.norm_kind)

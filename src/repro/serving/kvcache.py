@@ -232,6 +232,50 @@ def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
     return jax.tree.map(write, pools, single_cache)
 
 
+def write_chunk_tokens(pools: Any, caches: Any, src_rows: Any,
+                       src_lanes: Any, dst_blocks: Any,
+                       dst_lanes: Any) -> Any:
+    """Batched ragged-chunk writeback: scatter every valid token of a
+    ragged chunk-batch prefill cache (``Model.prefill_paged`` under
+    continuous batching) into its (physical block, lane) pool home —
+    one gather + one scatter per pool leaf for the WHOLE batch, instead
+    of a per-row slice-and-splice (whose eager-op count per step made
+    chunked steps several times slower than pure-decode steps).
+
+    ``src_rows[t], src_lanes[t]`` address token ``t`` on the cache's
+    (batch, seq) axes; ``dst_blocks[t], dst_lanes[t]`` its pool home.
+    Only the listed lanes are touched: lanes outside the chunk keep what
+    they held, which is safe because released blocks are invalidated
+    (``pos -> -1``) before reuse — the invariant decode growth writes
+    already rely on — and it preserves copy-on-write prefix lanes before
+    a mid-block resume point without a keep-mask.  Callers may pad the
+    index arrays to a bucket by repeating a valid entry: duplicate
+    (block, lane) pairs carry identical values, so the scatter is
+    idempotent.
+
+    Layout (see transformer.stack_prefill_paged): "periods" leaves have
+    batch at axis 1 behind the leading ``n_periods`` axis, "rem" leaves
+    at axis 0; pool leaves put (num_blocks, block_size) at those same
+    axes.
+    """
+    sr = jnp.asarray(src_rows, jnp.int32)
+    sl = jnp.asarray(src_lanes, jnp.int32)
+    db = jnp.asarray(dst_blocks, jnp.int32)
+    dl = jnp.asarray(dst_lanes, jnp.int32)
+
+    def wr(axis):
+        def go(pool_leaf, cache_leaf):
+            pre = (slice(None),) * axis
+            vals = cache_leaf[pre + (sr, sl)].astype(pool_leaf.dtype)
+            return pool_leaf.at[pre + (db, dl)].set(vals)
+        return go
+
+    return {"periods": jax.tree.map(wr(1), pools.get("periods", {}),
+                                    caches.get("periods", {})),
+            "rem": jax.tree.map(wr(0), pools.get("rem", {}),
+                                caches.get("rem", {}))}
+
+
 # trailing (non-block) axes per pool-leaf name: leaves are shaped
 # (..., num_blocks, block_size, *tail) with period-stacked variants
 # carrying a leading n_periods axis, so the block axis is located from

@@ -154,6 +154,58 @@ def mixed_length_workload(*, num_requests: int, vocab_size: int,
     return MixedLengthWorkload(prompts, [int(n) for n in news])
 
 
+@dataclasses.dataclass
+class BurstyMixedWorkload:
+    """Mixed-length prompts arriving in bursts — the continuous-batching
+    stress shape: each burst lands several requests at once (long tail
+    included), so the engine faces a prefill backlog while earlier
+    bursts are mid-decode.  A one-admission-per-step scheduler stalls
+    every running decode for each whole-prompt prefill; chunked
+    continuous admission drains the backlog under a token budget and
+    keeps decode latency flat."""
+
+    bursts: List[List[np.ndarray]]       # prompts per burst
+    burst_news: List[List[int]]          # max_new per prompt per burst
+
+    @property
+    def prompts(self) -> List[np.ndarray]:
+        return [p for burst in self.bursts for p in burst]
+
+    @property
+    def max_news(self) -> List[int]:
+        return [n for burst in self.burst_news for n in burst]
+
+    @property
+    def total_prompt_tokens(self) -> int:
+        return sum(len(p) for p in self.prompts)
+
+
+def bursty_mixed_workload(*, num_bursts: int, burst_size: int,
+                          vocab_size: int, min_len: int = 4,
+                          max_len: int = 96, median_len: float = 12.0,
+                          sigma: float = 0.8, min_new: int = 2,
+                          max_new: int = 24,
+                          seed: int = 0) -> BurstyMixedWorkload:
+    """Chunk a lognormal mixed-length workload into arrival bursts, with
+    each burst's longest prompt forced to ``max_len`` so every burst
+    carries at least one backlog-building long prefill."""
+    wl = mixed_length_workload(
+        num_requests=num_bursts * burst_size, vocab_size=vocab_size,
+        min_len=min_len, max_len=max_len, median_len=median_len,
+        sigma=sigma, min_new=min_new, max_new=max_new, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    bursts, news = [], []
+    for b in range(num_bursts):
+        sl = slice(b * burst_size, (b + 1) * burst_size)
+        prompts = wl.prompts[sl]
+        longest = max(range(len(prompts)), key=lambda i: len(prompts[i]))
+        prompts[longest] = rng.integers(1, vocab_size,
+                                        max_len).astype(np.int32)
+        bursts.append(prompts)
+        news.append(wl.max_news[sl])
+    return BurstyMixedWorkload(bursts, news)
+
+
 def shared_prefix_workload(*, num_requests: int, prefix_len: int,
                            suffix_len: int, vocab_size: int,
                            num_prefixes: int = 1, seed: int = 0,

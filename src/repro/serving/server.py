@@ -30,7 +30,7 @@ import numpy as np
 from repro.serving.balancer import LoadBalancer, Overloaded
 from repro.serving.broker import Broker, PartitionFull
 from repro.serving.kvcache import (BlockAllocator, SlotManager, copy_blocks,
-                                   invalidate_blocks, write_prefill_blocks,
+                                   invalidate_blocks, write_chunk_tokens,
                                    write_slot)
 from repro.serving.prefix_cache import MatchResult, PrefixCache
 from repro.serving.sim import Clock, QueuedResource
@@ -44,6 +44,8 @@ from repro.serving.store import ResultStore
 #:   engine            "slot" | "paged"
 #:   queue_depth       requests waiting for admission
 #:   active            requests currently decoding
+#:   prefilling        admitted requests still streaming prompt chunks
+#:                     into the pool                       (paged)
 #:   free_blocks / used_blocks / total_blocks
 #:                     pool accounting (slot engine: 1 slot == 1 block)
 #:   pool_occupancy    used_blocks / total_blocks
@@ -350,9 +352,41 @@ class LLMEngine:
 # ---------------------------------------------------------------- paged LLM
 
 
+@dataclasses.dataclass
+class _PrefillState:
+    """Chunk cursor for an admitted request whose prompt is still
+    streaming into the KV pool.  ``seq`` is the full sequence to write
+    (prompt + generated tokens on a preempt-resume); lanes ``[start,
+    done)`` are already spliced; ``blocks`` are the request's own
+    private blocks and ``all_blocks`` prepends the refcount-shared
+    prefix-cache blocks.  ``start`` (= matched prefix + COW offset)
+    never moves; ``done`` advances one chunk per step."""
+
+    req: GenRequest
+    seq: np.ndarray
+    blocks: List[int]
+    all_blocks: List[int]
+    start: int
+    done: int
+
+
 class PagedLLMEngine:
     """Continuous batching over a block-paged KV pool with an
     admission-aware scheduler.
+
+    The step loop is a continuous-batching scheduler (Sarathi/vLLM
+    chunked prefill): every ``step()`` admits ALL admissible queued
+    requests (not one), advances every pending prefill by up to
+    ``prefill_chunk`` tokens in ONE ragged bucketed dispatch (per-row
+    cursors/lengths/tables — a single trace serves any mix of chunk
+    progress), then advances the decode batch one token.  Long prompts
+    therefore never stall running decodes: at most ``step_token_budget``
+    prompt tokens enter each step (default one chunk's worth), so decode
+    latency stays flat while the prefill backlog drains.
+    ``scheduler="serial"`` restores the pre-continuous behaviour — admit
+    at most one request per step, whole-prompt prefill, decode only on
+    admission-free steps — kept as the benchmark baseline and for exact
+    per-shape trace accounting.
 
     Versus ``LLMEngine`` (one contiguous ``cache_max`` strip per slot):
 
@@ -398,16 +432,26 @@ class PagedLLMEngine:
                  max_len: int = 256, eos_id: Optional[int] = None,
                  prefix_cache: bool = False,
                  prefill_buckets="auto",
-                 decode_kernel: Optional[bool] = None):
+                 decode_kernel: Optional[bool] = None,
+                 prefill_chunk: int = 256,
+                 step_token_budget: Optional[int] = None,
+                 scheduler: str = "continuous"):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
                              "pure-attention decoder-only stack")
+        if scheduler not in ("continuous", "serial"):
+            raise ValueError(f"scheduler must be 'continuous' or 'serial', "
+                             f"got {scheduler!r}")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
         self.model = model
         self.params = params
         self.block_size = block_size
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.scheduler = scheduler
         self.allocator = BlockAllocator(num_blocks, block_size)
         self.pools = model.pool_init(num_blocks, block_size)
         self.prefix_cache: Optional[PrefixCache] = \
@@ -417,6 +461,7 @@ class PagedLLMEngine:
         self.pos = np.zeros((max_batch,), np.int64)
         self.active: Dict[int, GenRequest] = {}      # row -> request
         self.row_blocks: Dict[int, List[int]] = {}   # row -> physical blocks
+        self.prefilling: Dict[int, _PrefillState] = {}   # row -> cursor
         self.queue: List[GenRequest] = []
         self._rid = 0
         self.preemptions = 0
@@ -427,7 +472,14 @@ class PagedLLMEngine:
         self.cow_copies = 0
         self.decode_kernel = decode_kernel
         self.buckets = self._resolve_buckets(prefill_buckets)
-        self._prefill_sigs: set = set()       # (padded_len, padded_blocks)
+        # bucket-align the chunk so chunked dispatches land on the same
+        # trace signatures whole-suffix dispatches already use
+        self.prefill_chunk = self._bucket_len(min(prefill_chunk, max_len))
+        # default budget = one chunk's worth of prompt tokens per step:
+        # bounds the per-step prefill compute without starving admission
+        self.step_token_budget = int(step_token_budget) if \
+            step_token_budget else self.prefill_chunk
+        self._prefill_sigs: set = set()   # (rows, padded_len, padded_blocks)
         self._decode_sigs: set = set()
 
         # the ONE prefill entry: padding-masked, position-offset, reads
@@ -479,6 +531,17 @@ class PagedLLMEngine:
             m *= 2
         return m
 
+    def _bucket_rows(self, n: int) -> int:
+        """Ragged-batch row bucket: next power of two so the chunk
+        dispatch compiles O(log max_batch) row variants as the backlog
+        drains (exact row count when bucketing is off)."""
+        if self.buckets is None:
+            return max(n, 1)
+        m = 1
+        while m < n:
+            m *= 2
+        return m
+
     # ------------------------------------------------------------ client
     def submit(self, prompt: np.ndarray, max_new: int = 16,
                now: float = 0.0) -> int:
@@ -501,7 +564,7 @@ class PagedLLMEngine:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and not self.active
+        return not self.queue and not self.active and not self.prefilling
 
     def stats(self) -> Dict[str, float]:
         """Gauges per the module-level stats schema."""
@@ -511,6 +574,7 @@ class PagedLLMEngine:
             "engine": "paged",
             "queue_depth": len(self.queue),
             "active": len(self.active),
+            "prefilling": len(self.prefilling),
             "free_blocks": alloc.num_free,
             "used_blocks": alloc.num_live,
             "total_blocks": alloc.num_usable,
@@ -547,7 +611,7 @@ class PagedLLMEngine:
     # ------------------------------------------------------------ sched
     def _free_row(self) -> Optional[int]:
         for r in range(self.max_batch):
-            if r not in self.active:
+            if r not in self.active and r not in self.prefilling:
                 return r
         return None
 
@@ -597,7 +661,9 @@ class PagedLLMEngine:
             need += 1      # its own first decode step crosses a boundary
         free_after = avail - need
         if free_after < 0:
-            return not self.active            # always keep making progress
+            # always keep making progress: force-admit only when nothing
+            # else is running OR mid-prefill (their blocks are held)
+            return not self.active and not self.prefilling
         if not self.active:
             return True
         return free_after >= self._next_step_block_need()
@@ -624,20 +690,62 @@ class PagedLLMEngine:
             self.pools = invalidate_blocks(self.pools, released)
 
     def step(self, now: float = 0.0) -> List[GenRequest]:
-        """Admit one queued request (prefill) OR advance the whole batch
-        one token.  Returns finished requests."""
-        if self.queue and self._free_row() is not None and \
+        """One scheduler step.  Continuous (default): admit every
+        admissible queued request, advance all pending prefills by one
+        token-budgeted ragged chunk dispatch, then advance the decode
+        batch one token — decode latency stays flat while the prefill
+        backlog drains.  Serial: admit at most one request per step,
+        prefill its whole prompt, decode only on admission-free steps
+        (the pre-continuous behaviour, kept as the benchmark baseline).
+        Returns finished requests."""
+        while self.queue and self._free_row() is not None and \
+                not self._defer_for_prefix(self.queue[0]) and \
                 self._admission_ok(self.queue[0]):
-            return self._admit(now)
+            self._admit_setup(self.queue.pop(0), now)
+            if self.scheduler == "serial":
+                break
+        done: List[GenRequest] = []
+        prefilled = bool(self.prefilling)
+        if self.prefilling:
+            self._prefill_chunks(now)
+            # requests satisfied at prefill (max_new == 1 / max_len edge)
+            # must leave before the decode below hands them another token
+            done = self._collect(now)
+        if self.scheduler == "serial" and prefilled:
+            return done
         if self.active:
-            return self._decode_all(now)
-        return []
+            return done + self._decode_all(now)
+        return done + self._collect(now)
 
-    def _admit(self, now: float) -> List[GenRequest]:
-        req = self.queue.pop(0)
-        # resume-aware: a preempted request re-prefills (or re-matches —
-        # its own blocks usually survive in the tree) its prompt plus
-        # everything it already generated (same greedy continuation).
+    def _defer_for_prefix(self, req: GenRequest) -> bool:
+        """Hold a request back while a still-prefilling request is
+        writing a prefix it shares: once the writer finishes and
+        publishes its blocks to the radix tree, the held request admits
+        with cache hits instead of recomputing the shared prefix.  (The
+        serial scheduler got this ordering for free by admitting one
+        request per step; pending prefills always progress, so deferral
+        can never deadlock.)"""
+        if self.prefix_cache is None or not self.prefilling:
+            return False
+        seq = self._seq_for(req)[:-1]         # last token never matchable
+        if not len(seq):
+            return False
+        m = self._match_for(req, probe=True)
+        matched = len(m.blocks) * self.block_size + m.partial_len
+        for st in self.prefilling.values():
+            n = min(len(seq), len(st.seq))
+            eq = seq[:n] == st.seq[:n]
+            common = int(n if eq.all() else np.argmin(eq))
+            if common >= self.block_size and common > matched:
+                return True
+        return False
+
+    def _admit_setup(self, req: GenRequest, now: float) -> None:
+        """Claim a row + physical blocks for a queued request and queue
+        its prompt for chunked prefill (no model dispatch here).
+        Resume-aware: a preempted request re-prefills (or re-matches —
+        its own blocks usually survive in the tree) its prompt plus
+        everything it already generated (same greedy continuation)."""
         seq = self._seq_for(req)
         bs = self.block_size
         nb_total = self.allocator.blocks_for(len(seq))
@@ -666,48 +774,127 @@ class PagedLLMEngine:
                                      [blocks[0]])
             self.cow_copies += 1
             self.allocator.free([match.partial_block])       # drop COW hold
-        # bucketed, padding-masked prefill of the uncached suffix (the
-        # whole sequence when nothing matched): tokens padded to a length
-        # bucket, prefix table 0-padded (null blocks never validate) to a
-        # block bucket — the trace signature is (bucket, block bucket),
-        # not (exact suffix length, exact prefix blocks).
-        suffix = np.ascontiguousarray(seq[start:])
-        s_pad = self._bucket_len(len(suffix))
-        toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :len(suffix)] = suffix
-        prefix_table = match.blocks + (blocks[:1] if j else [])
-        nb_pad = self._bucket_blocks(len(prefix_table))
-        bt = np.zeros((1, nb_pad), np.int32)
-        bt[0, :len(prefix_table)] = prefix_table
-        self._prefill_sigs.add((s_pad, nb_pad))
-        logits, cache1 = self._prefill_paged(
-            self.params, {"tokens": toks}, self.pools, jnp.asarray(bt),
-            jnp.int32(start), jnp.asarray([len(suffix)], jnp.int32), s_pad)
-        self.pools = write_prefill_blocks(self.pools, cache1, blocks,
-                                          bs, offset=j,
-                                          valid_len=len(suffix))
-        self.prefill_tokens += len(suffix)
         all_blocks = match.blocks + blocks
+        # the engine-side block_table row stays null until the prefill
+        # completes: decode dispatches route every INACTIVE row's masked
+        # write through its table row, which must hit the null block —
+        # chunk dispatches carry their own ragged tables meanwhile.
+        self.block_table[row, :] = 0
+        self.pos[row] = 0
+        self.prefilling[row] = _PrefillState(req, seq, blocks, all_blocks,
+                                             start, start)
+        self.admissions += 1
+        self.peak_active = max(self.peak_active,
+                               len(self.active) + len(self.prefilling))
+
+    def _prefill_chunks(self, now: float) -> None:
+        """Advance every pending prefill by up to one chunk in ONE
+        ragged bucketed dispatch, oldest request first, total new tokens
+        capped by ``step_token_budget`` (the oldest row always gets at
+        least one token so the backlog can never stall).  Rows are
+        padded to a power-of-two row bucket, tokens to a length bucket,
+        tables to a block bucket — the trace signature is (row bucket,
+        length bucket, block bucket).  The serial scheduler takes each
+        request's whole remaining suffix instead (one request, one
+        dispatch: the pre-chunking shapes)."""
+        bs = self.block_size
+        order = sorted(self.prefilling,
+                       key=lambda r: self.prefilling[r].req.rid)
+        budget = self.step_token_budget
+        sel: List[tuple] = []                     # (row, take)
+        for r in order:
+            st = self.prefilling[r]
+            remaining = len(st.seq) - st.done
+            take = remaining if self.scheduler == "serial" else \
+                min(self.prefill_chunk, remaining, budget)
+            if take <= 0:
+                break                             # budget exhausted
+            budget -= take
+            sel.append((r, take))
+        if not sel:                               # budget < 1: still move
+            r = order[0]
+            st = self.prefilling[r]
+            sel = [(r, min(self.prefill_chunk, len(st.seq) - st.done))]
+        r_pad = self._bucket_rows(len(sel))
+        c_pad = self._bucket_len(max(t for _, t in sel))
+        nb_pad = self._bucket_blocks(
+            max(len(self.prefilling[r].all_blocks) for r, _ in sel))
+        toks = np.zeros((r_pad, c_pad), np.int32)
+        starts = np.zeros((r_pad,), np.int32)
+        # pad rows: 1 "valid" garbage token against the null table —
+        # shape-legal, masked everywhere, discarded below
+        lens = np.ones((r_pad,), np.int32)
+        bt = np.zeros((r_pad, nb_pad), np.int32)
+        for i, (r, take) in enumerate(sel):
+            st = self.prefilling[r]
+            toks[i, :take] = st.seq[st.done:st.done + take]
+            starts[i] = st.done
+            lens[i] = take
+            bt[i, :len(st.all_blocks)] = st.all_blocks
+        self._prefill_sigs.add((r_pad, c_pad, nb_pad))
+        logits, caches = self._prefill_paged(
+            self.params, {"tokens": toks}, self.pools, jnp.asarray(bt),
+            jnp.asarray(starts), jnp.asarray(lens), c_pad)
+        # batched writeback: flat (cache row/lane -> pool block/lane)
+        # index lists over every valid token of the dispatch, padded to
+        # a length bucket (entry-0 repeats are idempotent) so the
+        # scatter's own shape set stays bounded like the dispatch's
+        src_r, src_l, dst_b, dst_l = [], [], [], []
+        for i, (r, take) in enumerate(sel):
+            st = self.prefilling[r]
+            p = np.arange(st.done, st.done + take)
+            src_r.append(np.full(take, i, np.int32))
+            src_l.append(np.arange(take, dtype=np.int32))
+            dst_b.append(np.asarray(st.all_blocks, np.int32)[p // bs])
+            dst_l.append((p % bs).astype(np.int32))
+        src_r, src_l, dst_b, dst_l = map(np.concatenate,
+                                         (src_r, src_l, dst_b, dst_l))
+        pad = self._bucket_len(len(src_r)) - len(src_r)
+        if pad:
+            src_r, src_l, dst_b, dst_l = (
+                np.concatenate([a, np.repeat(a[:1], pad)])
+                for a in (src_r, src_l, dst_b, dst_l))
+        self.pools = write_chunk_tokens(self.pools, caches,
+                                        src_r, src_l, dst_b, dst_l)
+        arr = None
+        for i, (r, take) in enumerate(sel):
+            st = self.prefilling[r]
+            st.done += take
+            self.prefill_tokens += take
+            if st.done == len(st.seq):
+                if arr is None:
+                    arr = np.asarray(logits)
+                self._finish_prefill(r, int(np.argmax(arr[i, 0])), now)
+
+    def _finish_prefill(self, row: int, tok: int, now: float) -> None:
+        """Last chunk spliced: emit the first token and move the row to
+        the decode batch."""
+        st = self.prefilling.pop(row)
+        req = st.req
         if self.prefix_cache is not None:
             # publish this request's full blocks (matched ones dedupe)
-            self.prefix_cache.insert(seq, all_blocks, self.allocator)
-        self.block_table[row, :] = 0
-        self.block_table[row, :len(all_blocks)] = all_blocks
-        self.pos[row] = len(seq)
-        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+            self.prefix_cache.insert(st.seq, st.all_blocks, self.allocator)
         req.out_tokens.append(tok)
         if req.first_token_at is None:
             req.first_token_at = now
         self.active[row] = req
-        self.row_blocks[row] = list(all_blocks)
-        self.admissions += 1
-        self.peak_active = max(self.peak_active, len(self.active))
-        return self._collect(now)
+        self.row_blocks[row] = list(st.all_blocks)
+        self.block_table[row, :len(st.all_blocks)] = st.all_blocks
+        self.pos[row] = len(st.seq)
 
     def _preempt_youngest(self) -> None:
-        row = max(self.active, key=lambda r: self.active[r].rid)
-        req = self.active.pop(row)
-        self._free_blocks(self.row_blocks.pop(row))
+        """Evict the youngest admitted request — decoding OR mid-prefill
+        (chunk granularity: a half-prefilled prompt just drops its
+        blocks and re-chunks from its cursor start on resume)."""
+        rows = {r: st.req for r, st in self.prefilling.items()}
+        rows.update({r: req for r, req in self.active.items()})
+        row = max(rows, key=lambda r: rows[r].rid)
+        req = rows[row]
+        if row in self.prefilling:
+            self._free_blocks(self.prefilling.pop(row).all_blocks)
+        else:
+            del self.active[row]
+            self._free_blocks(self.row_blocks.pop(row))
         self.block_table[row, :] = 0
         self.pos[row] = 0
         self.queue.insert(0, req)             # resumes as soon as blocks free
@@ -726,7 +913,7 @@ class PagedLLMEngine:
                     self.row_blocks[row].append(got[0])
                     self.block_table[row, len(self.row_blocks[row]) - 1] = \
                         got[0]
-                elif len(self.active) == 1:
+                elif len(self.active) + len(self.prefilling) == 1:
                     raise RuntimeError(
                         "KV pool too small for a single request: "
                         f"{self.allocator.num_usable} usable blocks")

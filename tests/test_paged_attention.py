@@ -182,7 +182,10 @@ def test_bucketed_prefill_with_prefix_cache_identity(qwen_model):
 def test_prefill_retraces_bounded_by_buckets(qwen_model):
     """>= 8 distinct prompt lengths must compile at most #buckets prefill
     variants — asserted against jax's jit cache, with the stats() counter
-    required to agree (so the gauge can be trusted in production)."""
+    required to agree (so the gauge can be trusted in production).  Runs
+    the serial scheduler: one request per dispatch gives exact per-length
+    trace accounting (continuous batching coalesces rows — its own
+    retrace bound lives in test_continuous_batching.py)."""
     model, params = qwen_model
     cfg = model.cfg
     rng = np.random.default_rng(1)
@@ -190,11 +193,13 @@ def test_prefill_retraces_bounded_by_buckets(qwen_model):
     prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
                for n in lengths]
 
-    exact_eng, _ = _drive(model, params, prompts, prefill_buckets="off")
+    exact_eng, _ = _drive(model, params, prompts, prefill_buckets="off",
+                          scheduler="serial")
     assert exact_eng._prefill_paged._cache_size() == len(lengths)
     assert exact_eng.stats()["prefill_compiles"] == len(lengths)
 
-    eng, _ = _drive(model, params, prompts, prefill_buckets="auto")
+    eng, _ = _drive(model, params, prompts, prefill_buckets="auto",
+                    scheduler="serial")
     n_buckets = len({eng._bucket_len(n) for n in lengths})
     assert n_buckets < len(lengths)
     assert eng._prefill_paged._cache_size() <= n_buckets
