@@ -20,7 +20,9 @@ admissible request per step and drains prompt prefills as
 running decodes keep advancing every step; ``--scheduler serial`` is
 the one-admission-per-step whole-prompt baseline.
 Queue/pool/prefix-cache/compile gauges are printed every
-``--stats-every`` steps and at exit.
+``--stats-every`` steps and at exit.  ``--metrics`` dumps the full
+Prometheus text exposition at exit; ``--trace-out PATH`` writes a
+Chrome trace-event JSON of the run (open in https://ui.perfetto.dev).
 """
 from __future__ import annotations
 
@@ -32,13 +34,24 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models.api import Model
+from repro.obs import Observability
 from repro.serving.server import LLMEngine, PagedLLMEngine
 
 
 def _fmt_stats(stats: dict) -> str:
-    """Render the stats-schema gauges (see serving/server.py).  Every
-    key goes through ``.get()`` — stats dicts from older engines or
-    persisted snapshots may omit newer gauges."""
+    """Render the stats-schema gauges (``serving/stats_schema.py``) or,
+    for balancer snapshots (``LoadBalancer.stats()``), the dispatch
+    counters.  Every key goes through ``.get()`` — stats dicts from
+    older engines or persisted snapshots may omit newer gauges."""
+    if "replica_loads" in stats:
+        line = (f"[lb] picks={stats.get('picks', 0)} "
+                f"rejections={stats.get('rejections', 0)} "
+                f"releases={stats.get('releases', 0)} "
+                f"imbalance={stats.get('imbalance', 0.0):.2f} "
+                f"loads={stats.get('replica_loads', [])}")
+        if isinstance(stats.get("engine"), dict):
+            line += "\n" + _fmt_stats(stats["engine"])
+        return line
     line = (f"[{stats.get('engine', '?')}] "
             f"queue={stats.get('queue_depth', 0)} "
             f"active={stats.get('active', 0)} "
@@ -56,7 +69,7 @@ def _fmt_stats(stats: dict) -> str:
     return line
 
 
-def build_engine(args, model, params):
+def build_engine(args, model, params, obs=None):
     if args.engine == "paged":
         buckets = args.prefill_buckets
         if buckets not in ("auto", "off"):
@@ -71,9 +84,10 @@ def build_engine(args, model, params):
                               decode_kernel=kernel,
                               scheduler=args.scheduler,
                               prefill_chunk=args.prefill_chunk,
-                              step_token_budget=args.step_token_budget)
+                              step_token_budget=args.step_token_budget,
+                              obs=obs)
     return LLMEngine(model, params, num_slots=args.slots,
-                     cache_max=args.cache_max)
+                     cache_max=args.cache_max, obs=obs)
 
 
 def main():
@@ -115,6 +129,11 @@ def main():
     ap.add_argument("--cache-max", type=int, default=128,
                     help="per-request cache strip (slot) / max_len (paged)")
     ap.add_argument("--stats-every", type=int, default=16)
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus text exposition at exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in Perfetto)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -128,7 +147,10 @@ def main():
     if args.engine is None:
         args.engine = "paged" if model.supports_paged else "slot"
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = build_engine(args, model, params)
+    obs = None
+    if args.metrics or args.trace_out:
+        obs = Observability.create(trace=args.trace_out is not None)
+    engine = build_engine(args, model, params, obs=obs)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -153,6 +175,11 @@ def main():
     for r in finished[:3]:
         print(f"  req {r.rid}: {len(r.out_tokens)} tokens "
               f"{r.out_tokens[:8]}...")
+    if obs is not None and args.trace_out:
+        n = obs.trace.export(args.trace_out)
+        print(f"trace: {n} events -> {args.trace_out}")
+    if obs is not None and args.metrics:
+        print(obs.metrics.render(), end="")
 
 
 if __name__ == "__main__":

@@ -42,7 +42,7 @@ class LoadBalancer:
 
     def __init__(self, num_replicas: int = 3, concurrency: int = 4,
                  queue_limit: int = 16, policy: str = "round_robin",
-                 seed: int = 0):
+                 seed: int = 0, metrics=None):
         self.replicas = [Replica(i, concurrency, queue_limit)
                          for i in range(num_replicas)]
         self.policy = policy
@@ -50,11 +50,30 @@ class LoadBalancer:
         self._rng = random.Random(seed)
         self.dispatched = 0
         self.rejected = 0
+        self.released = 0
+        self._m_picks = self._m_rejections = self._m_releases = None
+        self._m_load = []
+        if metrics is not None:
+            lab = {"policy": policy}
+            self._m_picks = metrics.counter(
+                "balancer_picks_total", "successful replica picks", lab)
+            self._m_rejections = metrics.counter(
+                "balancer_rejections_total",
+                "picks rejected with all replicas saturated", lab)
+            self._m_releases = metrics.counter(
+                "balancer_releases_total", "requests released", lab)
+            self._m_load = [
+                metrics.gauge("balancer_replica_in_flight",
+                              "requests in flight on one replica",
+                              {"replica": str(i)})
+                for i in range(num_replicas)]
 
     def pick(self) -> Replica:
         cand = [r for r in self.replicas if not r.full]
         if not cand:
             self.rejected += 1
+            if self._m_rejections:
+                self._m_rejections.inc()
             raise Overloaded("all replicas saturated")
         if self.policy == "round_robin":
             for _ in range(len(self.replicas)):
@@ -73,11 +92,18 @@ class LoadBalancer:
             raise ValueError(self.policy)
         r.in_flight += 1
         self.dispatched += 1
+        if self._m_picks:
+            self._m_picks.inc()
+            self._m_load[r.rid].set(r.in_flight)
         return r
 
     def release(self, r: Replica) -> None:
         r.in_flight -= 1
         r.served += 1
+        self.released += 1
+        if self._m_releases:
+            self._m_releases.inc()
+            self._m_load[r.rid].set(r.in_flight)
 
     def attach_engine_stats(self, fn) -> None:
         """Register a gauge source (e.g. ``PagedLLMEngine.stats``) so
@@ -87,8 +113,14 @@ class LoadBalancer:
 
     def stats(self) -> dict:
         """Dispatch counters + per-replica load, plus the attached
-        engine's queue/pool occupancy gauges when present."""
+        engine's queue/pool occupancy gauges when present.
+        ``picks``/``rejections``/``releases`` are the lifetime counter
+        names; ``dispatched``/``rejected`` stay as aliases for older
+        snapshot consumers."""
         out = {
+            "picks": self.dispatched,
+            "rejections": self.rejected,
+            "releases": self.released,
             "dispatched": self.dispatched,
             "rejected": self.rejected,
             "imbalance": round(self.imbalance(), 4),

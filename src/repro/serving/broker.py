@@ -34,7 +34,7 @@ class Record:
 
 class Broker:
     def __init__(self, num_partitions: int = 3, max_depth: int = 1024,
-                 seed: int = 0):
+                 seed: int = 0, metrics=None):
         self.num_partitions = num_partitions
         self.max_depth = max_depth
         self._logs: List[List[Record]] = [[] for _ in range(num_partitions)]
@@ -44,6 +44,20 @@ class Broker:
         self._rng = random.Random(seed)
         self.produced = 0
         self.rejected = 0
+        self._m_produced = self._m_rejected = self._m_polls = None
+        self._m_depth = []
+        if metrics is not None:
+            self._m_produced = metrics.counter(
+                "broker_produced_total", "records appended")
+            self._m_rejected = metrics.counter(
+                "broker_rejected_total", "produces refused (backpressure)")
+            self._m_polls = metrics.counter(
+                "broker_polls_total", "consumer poll calls")
+            self._m_depth = [
+                metrics.gauge("broker_partition_depth",
+                              "retained records in one partition",
+                              {"partition": str(p)})
+                for p in range(num_partitions)]
 
     # ------------------------------------------------------------ produce
     def partition_for(self, key: Optional[str]) -> int:
@@ -64,10 +78,15 @@ class Broker:
             log = self._logs[p]
             if len(log) >= self.max_depth:
                 self.rejected += 1
+                if self._m_rejected:
+                    self._m_rejected.inc()
                 raise PartitionFull(f"partition {p} at depth {len(log)}")
             offset = self._start[p] + len(log)
             log.append(Record(offset, key, value, timestamp))
             self.produced += 1
+            if self._m_produced:
+                self._m_produced.inc()
+                self._m_depth[p].set(len(log))
             return p, offset
 
     def _groups(self):
@@ -79,6 +98,8 @@ class Broker:
         """Read from the group's committed offset (at-least-once: the same
         records come back until committed)."""
         with self._lock:
+            if self._m_polls:
+                self._m_polls.inc()
             base = self._committed.get((group, partition),
                                        self._start[partition])
             log = self._logs[partition]

@@ -15,6 +15,7 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
+from repro.obs.metrics import Histogram
 from repro.serving.server import Outcome
 from repro.serving.sim import Clock
 
@@ -48,7 +49,7 @@ class LoadGenerator:
     def __init__(self, clock: Clock, issue: Callable[[Callable[[Outcome], None]], None],
                  *, users: int, spawn_rate: float, duration: float,
                  think_min: float = 0.5, think_max: float = 1.5,
-                 seed: int = 0, kind: str = "GET"):
+                 seed: int = 0, kind: str = "GET", metrics=None):
         self.clock = clock
         self.issue = issue
         self.users = users
@@ -58,6 +59,17 @@ class LoadGenerator:
         self.kind = kind
         self._rng = random.Random(seed)
         self.outcomes: List[Outcome] = []
+        # optional obs feed: per-kind latency histogram + failure counter
+        # (the table itself keeps exact percentiles over the outcome list
+        # — locust parity — while scrapes see the mergeable histogram)
+        self._m_latency = self._m_failures = None
+        if metrics is not None:
+            lab = {"kind": kind}
+            self._m_latency = metrics.histogram(
+                "http_request_seconds", "client-observed request latency",
+                lab)
+            self._m_failures = metrics.counter(
+                "http_failures_total", "non-2xx client outcomes", lab)
 
     def run(self) -> LoadReport:
         for u in range(self.users):
@@ -72,13 +84,24 @@ class LoadGenerator:
 
         def done(outcome: Outcome):
             self.outcomes.append(outcome)
+            if self._m_latency:
+                self._m_latency.observe(outcome.latency)
+                if not outcome.ok:
+                    self._m_failures.inc()
             think = self._rng.uniform(*self.think)
             self.clock.schedule(think, self._user_loop)
 
         self.issue(done)
 
     def _report(self) -> LoadReport:
-        lat = np.array([o.latency for o in self.outcomes] or [0.0]) * 1e3
+        # percentiles come from the same fixed-bucket histogram the
+        # metrics endpoint would scrape (the mean stays exact — sum and
+        # count are tracked exactly), so the locust-style table and the
+        # obs layer can never disagree about the run.
+        hist = self._m_latency or Histogram()
+        if not self._m_latency:
+            for o in self.outcomes:
+                hist.observe(o.latency)
         fails = sum(1 for o in self.outcomes if not o.ok)
         per_status: Dict[int, int] = {}
         for o in self.outcomes:
@@ -87,8 +110,9 @@ class LoadGenerator:
             kind=self.kind, users=self.users, spawn_rate=self.spawn_rate,
             duration=self.duration, total=len(self.outcomes),
             failures=fails,
-            mean_ms=float(lat.mean()), median_ms=float(np.median(lat)),
-            p95_ms=float(np.percentile(lat, 95)),
+            mean_ms=hist.mean * 1e3,
+            median_ms=hist.quantile(0.5) * 1e3,
+            p95_ms=hist.quantile(0.95) * 1e3,
             rps=len(self.outcomes) / self.duration,
             per_status=per_status)
 

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.engine import EngineObs
 from repro.serving.balancer import LoadBalancer, Overloaded
 from repro.serving.broker import Broker, PartitionFull
 from repro.serving.kvcache import (BlockAllocator, SlotManager, copy_blocks,
@@ -36,34 +37,12 @@ from repro.serving.prefix_cache import MatchResult, PrefixCache
 from repro.serving.sim import Clock, QueuedResource
 from repro.serving.store import ResultStore
 
-#: ``stats()`` gauge schema — THE reference for every consumer (the
-#: balancer snapshot embeds the dict verbatim; ``launch/serve.py``
-#: renders it; benchmarks persist it).  Consumers must read with
-#: ``.get()``: older engines / persisted snapshots may omit newer keys.
-#:
-#:   engine            "slot" | "paged"
-#:   queue_depth       requests waiting for admission
-#:   active            requests currently decoding
-#:   prefilling        admitted requests still streaming prompt chunks
-#:                     into the pool                       (paged)
-#:   free_blocks / used_blocks / total_blocks
-#:                     pool accounting (slot engine: 1 slot == 1 block)
-#:   pool_occupancy    used_blocks / total_blocks
-#:   admissions / preemptions / finished
-#:                     lifetime counters
-#:   peak_active       high-water concurrent requests        (paged)
-#:   prefill_tokens    prompt tokens actually computed       (paged)
-#:   prefix_cache      1 when the radix prefix cache is on   (paged)
-#:   hit_rate          prompt tokens served from cache / all prompt
-#:                     tokens                                (paged)
-#:   cached_blocks     blocks currently held by the tree     (paged)
-#:   evictions / cow_copies
-#:                     prefix-cache lifetime counters        (paged)
-#:   prefill_compiles  distinct prefill shapes traced so far (bucket-hit
-#:                     counter: stays at O(#buckets) with bucketing on)
-#:   decode_compiles   distinct decode shapes traced so far
-#:   decode_kernel     1 when decode routes through the Pallas
-#:                     paged-attention kernel                (paged)
+#: ``stats()`` gauge schema: ``serving/stats_schema.py`` is THE
+#: canonical key list (with ``validate()``, CI-asserted against both
+#: engines).  Consumers read snapshots with ``.get()`` — dicts
+#: persisted by older engines may omit newer keys.  Step-rate counters
+#: and latency histograms are the ``repro/obs`` layer (pass
+#: ``obs=Observability(...)`` to either engine).
 
 
 # ---------------------------------------------------------------- Stratus
@@ -114,18 +93,24 @@ class StratusApp:
     """The full pipeline under virtual time with real model execution."""
 
     def __init__(self, clock: Clock, predict_fn: Callable[[np.ndarray], np.ndarray],
-                 cfg: AppConfig = AppConfig(), seed: int = 0):
+                 cfg: AppConfig = AppConfig(), seed: int = 0, obs=None):
         self.clock = clock
         self.cfg = cfg
         self.predict_fn = predict_fn
+        self.obs = obs
+        metrics = obs.metrics if obs is not None else None
         self.balancer = LoadBalancer(cfg.nginx_replicas, cfg.nginx_concurrency,
-                                     cfg.nginx_queue, cfg.balancer_policy, seed)
+                                     cfg.nginx_queue, cfg.balancer_policy,
+                                     seed, metrics=metrics)
         self._nginx = [QueuedResource(clock, cfg.nginx_concurrency,
-                                      cfg.nginx_queue)
-                       for _ in range(cfg.nginx_replicas)]
+                                      cfg.nginx_queue, metrics=metrics,
+                                      name=f"nginx-{i}")
+                       for i in range(cfg.nginx_replicas)]
         self._flask = QueuedResource(clock, cfg.flask_concurrency,
-                                     cfg.flask_queue)
-        self.broker = Broker(cfg.partitions, cfg.partition_depth, seed)
+                                     cfg.flask_queue, metrics=metrics,
+                                     name="flask")
+        self.broker = Broker(cfg.partitions, cfg.partition_depth, seed,
+                             metrics=metrics)
         self.store = ResultStore()
         self._rng = np.random.default_rng(seed)
         self._req_id = 0
@@ -231,14 +216,49 @@ class GenRequest:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     submitted: float = 0.0
     first_token_at: Optional[float] = None
+    last_token_at: Optional[float] = None
     finished_at: Optional[float] = None
 
 
-class LLMEngine:
+class _EngineObsMixin:
+    """Shared instrumentation plumbing for both engines: an optional
+    ``EngineObs`` facade plus per-token timestamp tracking that feeds
+    the TTFT / inter-token histograms."""
+
+    obs: Optional[EngineObs] = None
+    _engine_kind = "slot"
+
+    def attach_obs(self, obs) -> None:
+        """Bind (or re-bind) an ``Observability`` bundle; ``None``
+        detaches.  Benchmarks re-bind a fresh bundle between the cold
+        (compile-inclusive) and warm measured passes so the histograms
+        cover exactly one pass."""
+        self.obs = EngineObs(obs, self._engine_kind) if obs is not None \
+            else None
+
+    def _note_token(self, req: GenRequest, now: float) -> None:
+        """One output token emitted for ``req`` at ``now``: track the
+        first/last token timestamps and feed the TTFT and inter-token
+        histograms (``first_token_at`` also drives benchmark TTFT)."""
+        if req.first_token_at is None:
+            req.first_token_at = now
+            if self.obs:
+                self.obs.first_token(req.rid, now, now - req.submitted)
+        elif self.obs:
+            gap = None if req.last_token_at is None \
+                else now - req.last_token_at
+            self.obs.token(req.rid, now, gap)
+        req.last_token_at = now
+
+
+class LLMEngine(_EngineObsMixin):
     """Continuous-batching decode over the unified Model API."""
 
+    _engine_kind = "slot"
+
     def __init__(self, model, params, num_slots: int = 4,
-                 cache_max: int = 512, eos_id: Optional[int] = None):
+                 cache_max: int = 512, eos_id: Optional[int] = None,
+                 obs=None):
         self.model = model
         self.params = params
         self.slots = SlotManager(num_slots)
@@ -253,9 +273,14 @@ class LLMEngine:
         self.active: Dict[int, GenRequest] = {}
         self.queue: List[GenRequest] = []
         self._rid = 0
+        self.admissions = 0
         self.finished_count = 0
+        self.prefill_tokens = 0
+        self.generated_tokens = 0
+        self._decode_batch_last = 0
         self._prefill_sigs: set = set()
         self._decode_sigs: set = set()
+        self.attach_obs(obs)
 
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_max=cache_max))
@@ -266,6 +291,8 @@ class LLMEngine:
         self._rid += 1
         self.queue.append(GenRequest(self._rid, np.asarray(prompt, np.int32),
                                      max_new, submitted=now))
+        if self.obs:
+            self.obs.request_queued(self._rid, now, len(prompt), max_new)
         return self._rid
 
     @property
@@ -275,6 +302,27 @@ class LLMEngine:
     def step(self, now: float = 0.0) -> List[GenRequest]:
         """Admit one queued request (prefill) OR advance all live slots by
         one token.  Returns finished requests."""
+        if self.obs is None:
+            return self._step(now)
+        t0 = time.perf_counter()
+        pre = (self.admissions, self.prefill_tokens, self.generated_tokens,
+               len(self._prefill_sigs) + len(self._decode_sigs))
+        self._decode_batch_last = 0
+        done = self._step(now)
+        self.obs.step(
+            now, time.perf_counter() - t0,
+            admitted=self.admissions - pre[0],
+            chunk_tokens=self.prefill_tokens - pre[1],
+            decode_batch=self._decode_batch_last,
+            tokens=self.generated_tokens - pre[2],
+            retraced=len(self._prefill_sigs) + len(self._decode_sigs)
+            > pre[3],
+            queue_depth=len(self.queue), active=len(self.active),
+            free_blocks=self.slots.num_free,
+            pool_occupancy=len(self.active) / max(self.num_slots, 1))
+        return done
+
+    def _step(self, now: float) -> List[GenRequest]:
         if self.queue and self.slots.num_free > 0:
             return self._admit(now)
         if self.active:
@@ -290,8 +338,15 @@ class LLMEngine:
         self.cache = write_slot(self.cache, cache1, slot)
         self.pos[slot] = len(req.prompt)
         tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        self.admissions += 1
+        self.prefill_tokens += len(req.prompt)
+        self.generated_tokens += 1
+        if self.obs:
+            self.obs.admitted(req.rid, now, resume=False, cached_blocks=0,
+                              cow=False)
+            self.obs.prefill_chunk(req.rid, now, 0, len(req.prompt))
         req.out_tokens.append(tok)
-        req.first_token_at = now
+        self._note_token(req, now)
         self.active[slot] = req
         return self._collect(now)
 
@@ -302,6 +357,7 @@ class LLMEngine:
         for s in live:
             tokens[s, 0] = self.active[s].out_tokens[-1]
         self._decode_sigs.add(self.num_slots)
+        self._decode_batch_last = len(live)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens),
                                           jnp.asarray(pos))
@@ -310,6 +366,8 @@ class LLMEngine:
             req = self.active[s]
             tok = int(np.argmax(arr[s, 0]))
             req.out_tokens.append(tok)
+            self.generated_tokens += 1
+            self._note_token(req, now)
             self.pos[s] += 1
         return self._collect(now)
 
@@ -327,11 +385,14 @@ class LLMEngine:
                 self.slots.free(s)
                 self.pos[s] = -1
                 self.finished_count += 1
+                if self.obs:
+                    self.obs.finished(req.rid, now, now - req.submitted,
+                                      len(req.out_tokens))
         return done
 
     def stats(self) -> Dict[str, float]:
-        """Queue/capacity gauges per the module-level stats schema
-        (slots stand in for blocks: one slot == cache_max tokens)."""
+        """Queue/capacity gauges per ``serving/stats_schema.py`` (slots
+        stand in for blocks: one slot == cache_max tokens)."""
         live = len(self.active)
         return {
             "engine": "slot",
@@ -342,7 +403,7 @@ class LLMEngine:
             "total_blocks": self.num_slots,
             "pool_occupancy": live / max(self.num_slots, 1),
             "preemptions": 0,
-            "admissions": self._rid - len(self.queue),
+            "admissions": self.admissions,
             "finished": self.finished_count,
             "prefill_compiles": len(self._prefill_sigs),
             "decode_compiles": len(self._decode_sigs),
@@ -370,7 +431,7 @@ class _PrefillState:
     done: int
 
 
-class PagedLLMEngine:
+class PagedLLMEngine(_EngineObsMixin):
     """Continuous batching over a block-paged KV pool with an
     admission-aware scheduler.
 
@@ -427,6 +488,8 @@ class PagedLLMEngine:
     switch (TPU / ``REPRO_USE_KERNELS``).
     """
 
+    _engine_kind = "paged"
+
     def __init__(self, model, params, num_blocks: int = 32,
                  block_size: int = 16, max_batch: int = 8,
                  max_len: int = 256, eos_id: Optional[int] = None,
@@ -435,7 +498,8 @@ class PagedLLMEngine:
                  decode_kernel: Optional[bool] = None,
                  prefill_chunk: int = 256,
                  step_token_budget: Optional[int] = None,
-                 scheduler: str = "continuous"):
+                 scheduler: str = "continuous",
+                 obs=None):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
                              "pure-attention decoder-only stack")
@@ -469,7 +533,10 @@ class PagedLLMEngine:
         self.finished_count = 0
         self.peak_active = 0
         self.prefill_tokens = 0
+        self.generated_tokens = 0
         self.cow_copies = 0
+        self._decode_batch_last = 0
+        self._preempted_rids: set = set()
         self.decode_kernel = decode_kernel
         self.buckets = self._resolve_buckets(prefill_buckets)
         # bucket-align the chunk so chunked dispatches land on the same
@@ -481,6 +548,7 @@ class PagedLLMEngine:
             step_token_budget else self.prefill_chunk
         self._prefill_sigs: set = set()   # (rows, padded_len, padded_blocks)
         self._decode_sigs: set = set()
+        self.attach_obs(obs)
 
         # the ONE prefill entry: padding-masked, position-offset, reads
         # any cached prefix through the (bucket-padded) block table.
@@ -560,6 +628,8 @@ class PagedLLMEngine:
         self._rid += 1
         self.queue.append(GenRequest(self._rid, prompt, max_new,
                                      submitted=now))
+        if self.obs:
+            self.obs.request_queued(self._rid, now, len(prompt), max_new)
         return self._rid
 
     @property
@@ -698,6 +768,29 @@ class PagedLLMEngine:
         prefill its whole prompt, decode only on admission-free steps
         (the pre-continuous behaviour, kept as the benchmark baseline).
         Returns finished requests."""
+        if self.obs is None:
+            return self._step(now)
+        t0 = time.perf_counter()
+        pre = (self.admissions, self.prefill_tokens, self.generated_tokens,
+               len(self._prefill_sigs) + len(self._decode_sigs))
+        self._decode_batch_last = 0
+        done = self._step(now)
+        alloc = self.allocator
+        self.obs.step(
+            now, time.perf_counter() - t0,
+            admitted=self.admissions - pre[0],
+            chunk_tokens=self.prefill_tokens - pre[1],
+            decode_batch=self._decode_batch_last,
+            tokens=self.generated_tokens - pre[2],
+            retraced=len(self._prefill_sigs) + len(self._decode_sigs)
+            > pre[3],
+            queue_depth=len(self.queue),
+            active=len(self.active) + len(self.prefilling),
+            free_blocks=alloc.num_free,
+            pool_occupancy=alloc.num_live / max(alloc.num_usable, 1))
+        return done
+
+    def _step(self, now: float) -> List[GenRequest]:
         while self.queue and self._free_row() is not None and \
                 not self._defer_for_prefix(self.queue[0]) and \
                 self._admission_ok(self.queue[0]):
@@ -786,6 +879,11 @@ class PagedLLMEngine:
         self.admissions += 1
         self.peak_active = max(self.peak_active,
                                len(self.active) + len(self.prefilling))
+        if self.obs:
+            resume = req.rid in self._preempted_rids
+            self._preempted_rids.discard(req.rid)
+            self.obs.admitted(req.rid, now, resume=resume,
+                              cached_blocks=k, cow=bool(j))
 
     def _prefill_chunks(self, now: float) -> None:
         """Advance every pending prefill by up to one chunk in ONE
@@ -859,6 +957,8 @@ class PagedLLMEngine:
         arr = None
         for i, (r, take) in enumerate(sel):
             st = self.prefilling[r]
+            if self.obs:
+                self.obs.prefill_chunk(st.req.rid, now, st.done, take)
             st.done += take
             self.prefill_tokens += take
             if st.done == len(st.seq):
@@ -875,14 +975,14 @@ class PagedLLMEngine:
             # publish this request's full blocks (matched ones dedupe)
             self.prefix_cache.insert(st.seq, st.all_blocks, self.allocator)
         req.out_tokens.append(tok)
-        if req.first_token_at is None:
-            req.first_token_at = now
+        self.generated_tokens += 1
+        self._note_token(req, now)
         self.active[row] = req
         self.row_blocks[row] = list(st.all_blocks)
         self.block_table[row, :len(st.all_blocks)] = st.all_blocks
         self.pos[row] = len(st.seq)
 
-    def _preempt_youngest(self) -> None:
+    def _preempt_youngest(self, now: float = 0.0) -> None:
         """Evict the youngest admitted request — decoding OR mid-prefill
         (chunk granularity: a half-prefilled prompt just drops its
         blocks and re-chunks from its cursor start on resume)."""
@@ -890,6 +990,7 @@ class PagedLLMEngine:
         rows.update({r: req for r, req in self.active.items()})
         row = max(rows, key=lambda r: rows[r].rid)
         req = rows[row]
+        where = "prefill" if row in self.prefilling else "decode"
         if row in self.prefilling:
             self._free_blocks(self.prefilling.pop(row).all_blocks)
         else:
@@ -899,6 +1000,9 @@ class PagedLLMEngine:
         self.pos[row] = 0
         self.queue.insert(0, req)             # resumes as soon as blocks free
         self.preemptions += 1
+        self._preempted_rids.add(req.rid)
+        if self.obs:
+            self.obs.preempted(req.rid, now, where)
 
     def _decode_all(self, now: float) -> List[GenRequest]:
         # grow block tables for the next write, oldest request first;
@@ -918,7 +1022,7 @@ class PagedLLMEngine:
                         "KV pool too small for a single request: "
                         f"{self.allocator.num_usable} usable blocks")
                 else:
-                    self._preempt_youngest()
+                    self._preempt_youngest(now)
         if not self.active:
             return []
 
@@ -930,12 +1034,15 @@ class PagedLLMEngine:
             pos[row] = self.pos[row]
             active_mask[row] = True
         self._decode_sigs.add((self.max_batch, self.nb_max))
+        self._decode_batch_last = len(self.active)
         logits, self.pools = self._decode(
             self.params, self.pools, jnp.asarray(self.block_table),
             jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active_mask))
         arr = np.asarray(logits)
         for row, req in self.active.items():
             req.out_tokens.append(int(np.argmax(arr[row, 0])))
+            self.generated_tokens += 1
+            self._note_token(req, now)
             self.pos[row] += 1
         return self._collect(now)
 
@@ -954,4 +1061,7 @@ class PagedLLMEngine:
                 self.block_table[row, :] = 0
                 self.pos[row] = 0
                 self.finished_count += 1
+                if self.obs:
+                    self.obs.finished(req.rid, now, now - req.submitted,
+                                      len(req.out_tokens))
         return done

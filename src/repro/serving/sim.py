@@ -19,14 +19,26 @@ class QueuedResource:
     """Concurrency-limited resource with a bounded FIFO wait queue (an
     NGINX worker pool / Flask WSGI server under virtual time)."""
 
-    def __init__(self, clock: "Clock", concurrency: int, queue_limit: int):
+    def __init__(self, clock: "Clock", concurrency: int, queue_limit: int,
+                 metrics=None, name: str = "resource"):
         self.clock = clock
         self.concurrency = concurrency
         self.queue_limit = queue_limit
         self.busy = 0
-        self._waiting: List[Tuple[float, Callable]] = []
+        self._waiting: List[Tuple[float, Callable, float]] = []
         self.served = 0
         self.rejected = 0
+        self._m_served = self._m_rejected = self._m_wait = None
+        if metrics is not None:
+            lab = {"resource": name}
+            self._m_served = metrics.counter(
+                "resource_served_total", "jobs completed", lab)
+            self._m_rejected = metrics.counter(
+                "resource_rejected_total",
+                "jobs refused with pool + queue full", lab)
+            self._m_wait = metrics.histogram(
+                "resource_wait_seconds",
+                "sim-time spent in the wait queue", lab)
 
     @property
     def load(self) -> int:
@@ -35,12 +47,16 @@ class QueuedResource:
     def submit(self, duration: float, done: Callable[[], None]) -> bool:
         """Returns False (reject) when pool + queue are full."""
         if self.busy < self.concurrency:
+            if self._m_wait:
+                self._m_wait.observe(0.0)
             self._start(duration, done)
             return True
         if len(self._waiting) < self.queue_limit:
-            self._waiting.append((duration, done))
+            self._waiting.append((duration, done, self.clock.now))
             return True
         self.rejected += 1
+        if self._m_rejected:
+            self._m_rejected.inc()
         return False
 
     def _start(self, duration: float, done: Callable) -> None:
@@ -49,9 +65,13 @@ class QueuedResource:
         def finish():
             self.busy -= 1
             self.served += 1
+            if self._m_served:
+                self._m_served.inc()
             done()
             if self._waiting and self.busy < self.concurrency:
-                d, cb = self._waiting.pop(0)
+                d, cb, enq = self._waiting.pop(0)
+                if self._m_wait:
+                    self._m_wait.observe(self.clock.now - enq)
                 self._start(d, cb)
 
         self.clock.schedule(duration, finish)

@@ -1,0 +1,95 @@
+"""Canonical ``stats()`` gauge-key schema for the serving engines.
+
+THE reference for every consumer of ``LLMEngine.stats()`` /
+``PagedLLMEngine.stats()``: the balancer snapshot embeds the dict
+verbatim (``LoadBalancer.attach_engine_stats``), ``launch/serve.py``
+renders it (``_fmt_stats``), and benchmarks persist it into the
+``BENCH_*.json`` reports.  This module replaces the comment block that
+used to live at the top of ``serving/server.py`` — as code, so CI can
+catch drift between the engines, the renderer, and this list
+(``validate`` is asserted against both engines' output in
+``tests/test_obs.py``).
+
+Consumers must still read snapshots with ``.get()``: dicts persisted by
+*older* engines may omit newer keys.  ``validate`` is strict in the
+other direction — a *current* engine must emit exactly the keys its
+kind declares here, no more and no fewer.
+
+The step-rate/latency half of observability (counters and histograms)
+is separate: see ``repro/obs/engine.py`` for those metric names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+BOTH = ("slot", "paged")
+PAGED = ("paged",)
+
+NUM = (int, float)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaugeSpec:
+    doc: str
+    engines: Tuple[str, ...] = BOTH
+    types: tuple = NUM
+
+
+SCHEMA = {
+    "engine": GaugeSpec('"slot" | "paged"', types=(str,)),
+    "queue_depth": GaugeSpec("requests waiting for admission"),
+    "active": GaugeSpec("requests currently decoding"),
+    "prefilling": GaugeSpec("admitted requests still streaming prompt "
+                            "chunks into the pool", PAGED),
+    "free_blocks": GaugeSpec("unallocated pool blocks (slot engine: "
+                             "1 slot == 1 block)"),
+    "used_blocks": GaugeSpec("allocated pool blocks"),
+    "total_blocks": GaugeSpec("usable pool capacity"),
+    "pool_occupancy": GaugeSpec("used_blocks / total_blocks"),
+    "admissions": GaugeSpec("lifetime admissions"),
+    "preemptions": GaugeSpec("lifetime preempt-and-requeues"),
+    "finished": GaugeSpec("lifetime completed requests"),
+    "peak_active": GaugeSpec("high-water concurrent requests", PAGED),
+    "prefill_tokens": GaugeSpec("prompt tokens actually computed", PAGED),
+    "prefix_cache": GaugeSpec("1 when the radix prefix cache is on",
+                              PAGED),
+    "hit_rate": GaugeSpec("prompt tokens served from cache / all prompt "
+                          "tokens", PAGED),
+    "cached_blocks": GaugeSpec("blocks currently held by the radix tree",
+                               PAGED),
+    "evictions": GaugeSpec("prefix-cache LRU evictions (lifetime)",
+                           PAGED),
+    "cow_copies": GaugeSpec("copy-on-write block copies (lifetime)",
+                            PAGED),
+    "prefill_compiles": GaugeSpec("distinct prefill shapes traced so far "
+                                  "(stays O(#buckets) with bucketing on)"),
+    "decode_compiles": GaugeSpec("distinct decode shapes traced so far"),
+    "decode_kernel": GaugeSpec("1 when decode routes through the Pallas "
+                               "paged-attention kernel", PAGED),
+}
+
+
+def validate(stats: dict) -> dict:
+    """Raise ``ValueError`` unless ``stats`` carries exactly the keys
+    its engine kind declares, each with a schema-conformant type.
+    Returns ``stats`` unchanged so calls chain."""
+    engine = stats.get("engine")
+    if engine not in BOTH:
+        raise ValueError(f"stats['engine'] must be one of {BOTH}, "
+                         f"got {engine!r}")
+    missing = [k for k, spec in SCHEMA.items()
+               if engine in spec.engines and k not in stats]
+    if missing:
+        raise ValueError(f"{engine} stats missing keys: {missing}")
+    unknown = [k for k in stats
+               if k not in SCHEMA or engine not in SCHEMA[k].engines]
+    if unknown:
+        raise ValueError(f"{engine} stats has undeclared keys: {unknown} "
+                         "(add them to serving/stats_schema.py first)")
+    bad = [k for k in stats if not isinstance(stats[k], SCHEMA[k].types)]
+    if bad:
+        raise ValueError(
+            f"{engine} stats type mismatch: "
+            + ", ".join(f"{k}={stats[k]!r}" for k in bad))
+    return stats
