@@ -19,6 +19,11 @@ admissible request per step and drains prompt prefills as
 ``--prefill-chunk``-token chunks under a ``--step-token-budget`` cap so
 running decodes keep advancing every step; ``--scheduler serial`` is
 the one-admission-per-step whole-prompt baseline.
+``--spec-decode ngram`` turns on speculative decoding with zero-weight
+prompt-lookup drafting (``--spec-k`` drafted tokens per request per
+step, verified in the fused ragged dispatch, token-identical to
+``off``); ``--spec-decode draft`` drafts with an early-exit truncation
+of the target (its first ``--draft-layers`` layers — no extra weights).
 Queue/pool/prefix-cache/compile gauges are printed every
 ``--stats-every`` steps and at exit.  ``--metrics`` dumps the full
 Prometheus text exposition at exit; ``--trace-out PATH`` writes a
@@ -36,6 +41,7 @@ from repro.configs.base import get_config
 from repro.models.api import Model
 from repro.obs import Observability
 from repro.serving.server import LLMEngine, PagedLLMEngine
+from repro.serving.spec_decode import layer_truncated_draft
 
 
 def _fmt_stats(stats: dict) -> str:
@@ -75,6 +81,10 @@ def build_engine(args, model, params, obs=None):
         if buckets not in ("auto", "off"):
             buckets = [int(b) for b in buckets.split(",")]
         kernel = {"auto": None, "on": True, "off": False}[args.decode_kernel]
+        draft_model = draft_params = None
+        if args.spec_decode == "draft":
+            draft_model, draft_params = layer_truncated_draft(
+                model, params, args.draft_layers)
         return PagedLLMEngine(model, params, num_blocks=args.num_blocks,
                               block_size=args.block_size,
                               max_batch=args.max_batch,
@@ -85,7 +95,13 @@ def build_engine(args, model, params, obs=None):
                               scheduler=args.scheduler,
                               prefill_chunk=args.prefill_chunk,
                               step_token_budget=args.step_token_budget,
+                              spec_decode=args.spec_decode,
+                              spec_k=args.spec_k,
+                              draft_model=draft_model,
+                              draft_params=draft_params,
                               obs=obs)
+    if args.spec_decode != "off":
+        raise SystemExit("--spec-decode needs the paged engine")
     return LLMEngine(model, params, num_slots=args.slots,
                      cache_max=args.cache_max, obs=obs)
 
@@ -123,6 +139,18 @@ def main():
     ap.add_argument("--step-token-budget", type=int, default=None,
                     help="max prompt tokens prefilled per engine step "
                          "(default: one chunk)")
+    ap.add_argument("--spec-decode", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="speculative decoding: ngram = prompt-lookup "
+                         "drafting (zero extra weights), draft = early-"
+                         "exit layer truncation of the target; output "
+                         "stays token-identical to off (paged engine, "
+                         "continuous scheduler only)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max drafted tokens per request per step")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="layers kept in the --spec-decode draft "
+                         "truncation")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)

@@ -170,7 +170,7 @@ class Model:
                                   jnp.dtype(dtype or self.cfg.dtype))
 
     def prefill_paged(self, params, batch, pools, block_table, start_pos, *,
-                      cache_max: int, seq_len=None):
+                      cache_max: int, seq_len=None, all_logits: bool = False):
         """Padding-masked position-offset prefill — the paged engine's
         single prefill entry (fresh prompts, preempt-resume, prefix-cache
         suffixes, and continuous-batching prefill chunks).
@@ -188,7 +188,12 @@ class Model:
         sized ``cache_max`` whose padded lanes carry ``pos`` -1) —
         splice the caches into each row's physical blocks with one
         batched ``write_chunk_tokens`` scatter (single request:
-        ``write_prefill_blocks``)."""
+        ``write_prefill_blocks``).
+
+        ``all_logits=True`` returns (B,S,V) logits for every lane
+        instead of the last-valid-token slice — the speculative-decode
+        verify path needs per-position argmax over the whole window
+        (padded lanes carry garbage; callers mask by ``seq_len``)."""
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(f"{cfg.name}: paged prefill unsupported "
@@ -207,6 +212,8 @@ class Model:
                                            pools, block_table, start_pos,
                                            cache_max, seq_len=seq_len)
         x = norm_apply(params["final_norm"], x, cfg.norm_kind)
+        if all_logits:
+            return unembed_apply(params["embed"], cfg, x), caches
         if seq_len is None:
             last = x[:, -1:, :]
         else:

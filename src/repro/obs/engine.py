@@ -19,6 +19,11 @@ gauge schema lives in ``serving/stats_schema.py``):
   engine_step_seconds                                       histogram
   request_ttft_seconds / request_e2e_seconds /
   request_intertoken_seconds                                histograms
+  engine_spec_proposed_total / engine_spec_accepted_total /
+  engine_spec_rollbacks_total                               counters
+  engine_spec_accepted_tokens                               histogram
+    (integer bounds 1..16: tokens emitted per verify row — the
+    accepted-tokens-per-step distribution of speculative decoding)
 
 Engine metrics carry an ``engine="slot"|"paged"`` label (two engines
 can share one registry without colliding); the ``request_*`` histograms
@@ -33,7 +38,9 @@ class EngineObs:
                  "c_requests", "c_admissions", "c_preemptions",
                  "c_finished", "c_prefill_tokens", "c_generated",
                  "c_steps", "g_queue", "g_active", "g_free_blocks",
-                 "g_occupancy", "h_step", "h_ttft", "h_e2e", "h_gap")
+                 "g_occupancy", "h_step", "h_ttft", "h_e2e", "h_gap",
+                 "c_spec_proposed", "c_spec_accepted", "c_spec_rollbacks",
+                 "h_spec_accepted")
 
     def __init__(self, bundle, kind: str):
         self.bundle = bundle
@@ -72,6 +79,19 @@ class EngineObs:
         self.h_gap = m.histogram(
             "request_intertoken_seconds",
             "gap between consecutive output tokens of one request")
+        self.c_spec_proposed = m.counter(
+            "engine_spec_proposed_total",
+            "drafted tokens sent to verification", lab)
+        self.c_spec_accepted = m.counter(
+            "engine_spec_accepted_total",
+            "drafted tokens that matched the target argmax", lab)
+        self.c_spec_rollbacks = m.counter(
+            "engine_spec_rollbacks_total",
+            "verify rows that rolled speculative lanes back", lab)
+        self.h_spec_accepted = m.histogram(
+            "engine_spec_accepted_tokens",
+            "tokens emitted per verify row (accepted drafts + bonus)",
+            lab, bounds=tuple(float(b) for b in range(1, 17)))
 
     # ------------------------------------------------------ lifecycle
     def request_queued(self, rid: int, now: float, prompt_len: int,
@@ -107,6 +127,24 @@ class EngineObs:
         self.c_generated.inc()
         if gap is not None:
             self.h_gap.observe(gap)
+
+    def spec_verify(self, rid: int, now: float, *, proposed: int,
+                    accepted: int, emitted: int, rolled_back: int) -> None:
+        """One speculative verify window resolved for ``rid``:
+        ``proposed`` drafted tokens went in, ``accepted`` matched the
+        target argmax, ``emitted`` tokens (accepted + bonus, EOS-
+        truncated) came out, ``rolled_back`` written lanes were
+        discarded.  Token counters are NOT touched here — the engine
+        reports each emitted token through ``first_token``/``token``."""
+        self.c_spec_proposed.inc(proposed)
+        self.c_spec_accepted.inc(accepted)
+        if rolled_back:
+            self.c_spec_rollbacks.inc()
+        self.h_spec_accepted.observe(emitted)
+        if self.trace:
+            self.trace.request(rid, "spec_verify", now, proposed=proposed,
+                               accepted=accepted, emitted=emitted,
+                               rolled_back=rolled_back)
 
     def preempted(self, rid: int, now: float, where: str) -> None:
         self.c_preemptions.inc()

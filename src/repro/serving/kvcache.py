@@ -324,6 +324,47 @@ def invalidate_blocks(pools: Any, block_ids: List[int]) -> Any:
     return walk(pools)
 
 
+def scrub_null_block(pools: Any) -> Any:
+    """Reset the null block's validity lanes (``pos[..., 0, :] -> -1``).
+    Block 0 is the engine's garbage sink: padded block-table entries
+    point at it, and the fused ragged-dispatch writeback routes every
+    invalid (padding) lane's scatter there instead of branching on the
+    host.  Its k/v payload may hold arbitrary garbage, but its ``pos``
+    lanes must stay -1 or padded table reads could un-mask — calling
+    this inside the same fused dispatch restores the invariant."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (v.at[..., 0, :].set(-1) if k == "pos" else walk(v))
+                    for k, v in node.items()}
+        return node
+
+    return walk(pools)
+
+
+def invalidate_lanes(pools: Any, block_ids: Any, lanes: Any) -> Any:
+    """Kill individual (block, lane) pairs' attention validity (pos ->
+    -1).  The speculative-decode rollback path uses this for the
+    partially-accepted tail of the *last kept* block: rejected drafted
+    tokens were written into lanes past the accepted cursor, and while
+    every read already masks them (prefill masks pool lanes ``>=
+    start_pos``, decode masks ``pos > query``), invalidating them keeps
+    the pool's ``pos`` lanes an exact record of valid KV — the same
+    invariant ``invalidate_blocks`` maintains for whole freed blocks.
+    Only ``pos`` leaves are touched (k/v payload lanes are inert once
+    ``pos`` is -1), so the update is O(num_blocks * block_size) ints per
+    layer, not a pool copy."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    ln = jnp.asarray(lanes, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (v.at[..., ids, ln].set(-1) if k == "pos" else walk(v))
+                    for k, v in node.items()}
+        return node
+
+    return walk(pools)
+
+
 def invalidate_slot(batched_cache: Any, cache_logical: Any, slot: int) -> Any:
     """Kill a slot's attention validity: position lanes -> -1, states -> 0.
 

@@ -230,6 +230,42 @@ def bursty_mixed_workload(*, num_bursts: int, burst_size: int,
     return BurstyMixedWorkload(bursts, news)
 
 
+@dataclasses.dataclass
+class RepetitiveWorkload:
+    """Repetition-heavy prompts with long continuations — the traffic
+    shape where n-gram / prompt-lookup speculative drafting is hot:
+    structured text (code, logs, templated chat) keeps re-using short
+    token patterns, so the drafted continuation of the current suffix
+    n-gram usually matches what greedy decode emits next."""
+
+    prompts: List[np.ndarray]
+    max_news: List[int]
+
+    @property
+    def total_prompt_tokens(self) -> int:
+        return sum(len(p) for p in self.prompts)
+
+
+def repetitive_workload(*, num_requests: int, vocab_size: int,
+                        period_lo: int = 2, period_hi: int = 5,
+                        prompt_len: int = 16, max_new: int = 40,
+                        seed: int = 0) -> RepetitiveWorkload:
+    """Each prompt cycles a random ``period``-token pattern (period
+    drawn from [period_lo, period_hi]) out to ``prompt_len`` tokens and
+    decodes ``max_new`` continuation tokens.  The prompt itself hands
+    the n-gram drafter an immediate lookup table, and greedy decode on
+    a repetitive context tends to continue the repetition — both the
+    draft-hit mechanism real repetition-heavy traffic exhibits."""
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for _ in range(num_requests):
+        period = int(rng.integers(period_lo, period_hi + 1))
+        pat = rng.integers(1, vocab_size, period).astype(np.int32)
+        reps = -(-prompt_len // period)
+        prompts.append(np.tile(pat, reps)[:prompt_len].astype(np.int32))
+    return RepetitiveWorkload(prompts, [max_new] * num_requests)
+
+
 def shared_prefix_workload(*, num_requests: int, prefix_len: int,
                            suffix_len: int, vocab_size: int,
                            num_prefixes: int = 1, seed: int = 0,

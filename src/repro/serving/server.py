@@ -31,9 +31,11 @@ from repro.obs.engine import EngineObs
 from repro.serving.balancer import LoadBalancer, Overloaded
 from repro.serving.broker import Broker, PartitionFull
 from repro.serving.kvcache import (BlockAllocator, SlotManager, copy_blocks,
-                                   invalidate_blocks, write_chunk_tokens,
+                                   invalidate_blocks, invalidate_lanes,
+                                   scrub_null_block, write_chunk_tokens,
                                    write_slot)
 from repro.serving.prefix_cache import MatchResult, PrefixCache
+from repro.serving.spec_decode import make_drafter
 from repro.serving.sim import Clock, QueuedResource
 from repro.serving.store import ResultStore
 
@@ -499,6 +501,9 @@ class PagedLLMEngine(_EngineObsMixin):
                  prefill_chunk: int = 256,
                  step_token_budget: Optional[int] = None,
                  scheduler: str = "continuous",
+                 spec_decode: str = "off", spec_k: int = 4,
+                 draft_model=None, draft_params=None,
+                 admission_window: int = 4,
                  obs=None):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
@@ -509,6 +514,17 @@ class PagedLLMEngine(_EngineObsMixin):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, "
                              f"got {prefill_chunk}")
+        if spec_decode not in ("off", "ngram", "draft"):
+            raise ValueError(f"spec_decode must be 'off', 'ngram' or "
+                             f"'draft', got {spec_decode!r}")
+        if spec_decode != "off" and scheduler != "continuous":
+            raise ValueError("spec_decode needs scheduler='continuous' "
+                             "(verify rows ride the ragged chunk dispatch)")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if admission_window < 1:
+            raise ValueError(f"admission_window must be >= 1, "
+                             f"got {admission_window}")
         self.model = model
         self.params = params
         self.block_size = block_size
@@ -537,6 +553,20 @@ class PagedLLMEngine(_EngineObsMixin):
         self.cow_copies = 0
         self._decode_batch_last = 0
         self._preempted_rids: set = set()
+        self.admission_window = admission_window
+        self.admission_skips = 0
+        # speculative decoding: drafter proposes, target verifies in the
+        # ragged dispatch, acceptance rolls the block table back
+        self.drafter = make_drafter(spec_decode, draft_model=draft_model,
+                                    draft_params=draft_params,
+                                    max_len=max_len)
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        self.spec_proposed = 0       # drafted tokens sent to verify
+        self.spec_accepted = 0       # drafted tokens that matched argmax
+        self.spec_emitted = 0        # tokens emitted by verify rows
+        self.spec_verify_rows = 0    # verify rows dispatched
+        self.spec_rollbacks = 0      # verify rows that rolled back lanes
         self.decode_kernel = decode_kernel
         self.buckets = self._resolve_buckets(prefill_buckets)
         # bucket-align the chunk so chunked dispatches land on the same
@@ -546,16 +576,54 @@ class PagedLLMEngine(_EngineObsMixin):
         # bounds the per-step prefill compute without starving admission
         self.step_token_budget = int(step_token_budget) if \
             step_token_budget else self.prefill_chunk
-        self._prefill_sigs: set = set()   # (rows, padded_len, padded_blocks)
+        self._prefill_sigs: set = set()   # _ragged_dispatch signatures
         self._decode_sigs: set = set()
         self.attach_obs(obs)
 
-        # the ONE prefill entry: padding-masked, position-offset, reads
-        # any cached prefix through the (bucket-padded) block table.
-        self._prefill_paged = jax.jit(
-            lambda p, b, pools, bt, sp, sl, cm: model.prefill_paged(
-                p, b, pools, bt, sp, seq_len=sl, cache_max=cm),
-            static_argnums=6)
+        # the ONE prefill entry (and its verify twin): padding-masked,
+        # position-offset, reads any cached prefix through the
+        # (bucket-padded) block table, and scatters the chunk's KV into
+        # its pool homes in the SAME dispatch — per-step overhead then
+        # matches a decode step's single fused call, which is what the
+        # speculative speed gate measures against.  The verify variant
+        # returns per-lane greedy tokens instead of last-valid logits:
+        # acceptance is pure argmax comparison, so the argmax runs
+        # on-device and only (rows, c_pad) int32 crosses to host
+        # instead of full-vocab logits per lane.
+        bs = block_size
+
+        def _prefill_entry(all_logits):
+            def go(p, b, pools, bt, sp, sl, cm):
+                logits, caches = model.prefill_paged(
+                    p, b, pools, bt, sp, seq_len=sl, cache_max=cm,
+                    all_logits=all_logits)
+                # scatter indices derived on-device: lane j of row i
+                # holds absolute position start+j, living in block
+                # bt[i, (start+j)//bs]; invalid (padding) lanes route
+                # to the null block, whose validity lanes are scrubbed
+                # back to -1 below — no host-side index assembly
+                r, c = b["tokens"].shape
+                lane = jnp.arange(c, dtype=jnp.int32)[None, :]
+                pos = sp[:, None] + lane
+                valid = lane < sl[:, None]
+                db = jnp.where(valid,
+                               jnp.take_along_axis(
+                                   bt, jnp.minimum(pos // bs,
+                                                   bt.shape[1] - 1),
+                                   axis=1), 0)
+                sr = jnp.broadcast_to(
+                    jnp.arange(r, dtype=jnp.int32)[:, None], (r, c))
+                slan = jnp.broadcast_to(lane, (r, c))
+                pools = write_chunk_tokens(pools, caches, sr.ravel(),
+                                           slan.ravel(), db.ravel(),
+                                           (pos % bs).ravel())
+                pools = scrub_null_block(pools)
+                out = jnp.argmax(logits, axis=-1).astype(jnp.int32) \
+                    if all_logits else logits
+                return out, pools
+            return jax.jit(go, static_argnums=6)
+        self._prefill_paged = _prefill_entry(False)
+        self._prefill_verify = _prefill_entry(True)
         self._decode = jax.jit(
             lambda p, pools, bt, t, pos, act: model.decode_step_paged(
                 p, pools, bt, t, pos, act, decode_kernel=decode_kernel))
@@ -662,6 +730,14 @@ class PagedLLMEngine(_EngineObsMixin):
             "prefill_compiles": len(self._prefill_sigs),
             "decode_compiles": len(self._decode_sigs),
             "decode_kernel": int(self._decode_kernel_on()),
+            "admission_skips": self.admission_skips,
+            "spec_decode": self.spec_decode,
+            "spec_k": self.spec_k if self.drafter is not None else 0,
+            "accepted_tokens_per_step":
+                self.spec_emitted / max(self.spec_verify_rows, 1),
+            "draft_hit_rate":
+                self.spec_accepted / max(self.spec_proposed, 1),
+            "spec_rollbacks": self.spec_rollbacks,
         }
 
     def _decode_kernel_on(self) -> bool:
@@ -791,12 +867,9 @@ class PagedLLMEngine(_EngineObsMixin):
         return done
 
     def _step(self, now: float) -> List[GenRequest]:
-        while self.queue and self._free_row() is not None and \
-                not self._defer_for_prefix(self.queue[0]) and \
-                self._admission_ok(self.queue[0]):
-            self._admit_setup(self.queue.pop(0), now)
-            if self.scheduler == "serial":
-                break
+        self._admit_all(now)
+        if self.drafter is not None:
+            return self._spec_step(now)
         done: List[GenRequest] = []
         prefilled = bool(self.prefilling)
         if self.prefilling:
@@ -809,6 +882,34 @@ class PagedLLMEngine(_EngineObsMixin):
         if self.active:
             return done + self._decode_all(now)
         return done + self._collect(now)
+
+    def _admit_all(self, now: float) -> None:
+        """Admit queued requests.  The continuous scheduler scans an
+        ``admission_window``-deep prefix of the queue instead of just
+        the head: a head that can't admit (pool too tight for its
+        *suffix* block need, or deferred behind a prefix writer) no
+        longer blocks a later request that CAN — in particular one
+        whose prompt is largely radix-cached and so needs only a few
+        suffix blocks (``_admission_ok`` already charges matched blocks
+        as free).  Requests are still tried in FIFO order inside the
+        window, so the head admits first whenever it fits.  Serial
+        keeps strict head-only admission."""
+        window = 1 if self.scheduler == "serial" else self.admission_window
+        while self.queue and self._free_row() is not None:
+            picked = None
+            for i, req in enumerate(self.queue[:window]):
+                if self._defer_for_prefix(req):
+                    continue
+                if self._admission_ok(req):
+                    picked = i
+                    break
+            if picked is None:
+                return
+            if picked:
+                self.admission_skips += 1
+            self._admit_setup(self.queue.pop(picked), now)
+            if self.scheduler == "serial":
+                return
 
     def _defer_for_prefix(self, req: GenRequest) -> bool:
         """Hold a request back while a still-prefilling request is
@@ -885,17 +986,13 @@ class PagedLLMEngine(_EngineObsMixin):
             self.obs.admitted(req.rid, now, resume=resume,
                               cached_blocks=k, cow=bool(j))
 
-    def _prefill_chunks(self, now: float) -> None:
-        """Advance every pending prefill by up to one chunk in ONE
-        ragged bucketed dispatch, oldest request first, total new tokens
-        capped by ``step_token_budget`` (the oldest row always gets at
-        least one token so the backlog can never stall).  Rows are
-        padded to a power-of-two row bucket, tokens to a length bucket,
-        tables to a block bucket — the trace signature is (row bucket,
-        length bucket, block bucket).  The serial scheduler takes each
-        request's whole remaining suffix instead (one request, one
-        dispatch: the pre-chunking shapes)."""
-        bs = self.block_size
+    def _select_chunks(self) -> tuple:
+        """Pick this step's prefill chunks: oldest request first, each
+        up to ``prefill_chunk`` tokens, total capped by
+        ``step_token_budget`` (the oldest row always gets at least one
+        token so the backlog can never stall).  The serial scheduler
+        takes each request's whole remaining suffix instead.  Pure —
+        touches no engine state.  -> ([(row, take)], budget_left)."""
         order = sorted(self.prefilling,
                        key=lambda r: self.prefilling[r].req.rid)
         budget = self.step_token_budget
@@ -909,52 +1006,60 @@ class PagedLLMEngine(_EngineObsMixin):
                 break                             # budget exhausted
             budget -= take
             sel.append((r, take))
-        if not sel:                               # budget < 1: still move
+        if not sel and order:                     # budget < 1: still move
             r = order[0]
             st = self.prefilling[r]
             sel = [(r, min(self.prefill_chunk, len(st.seq) - st.done))]
-        r_pad = self._bucket_rows(len(sel))
-        c_pad = self._bucket_len(max(t for _, t in sel))
-        nb_pad = self._bucket_blocks(
-            max(len(self.prefilling[r].all_blocks) for r, _ in sel))
+            budget = 0
+        return sel, max(budget, 0)
+
+    def _ragged_dispatch(self, rows: List[tuple], *, all_logits: bool):
+        """ONE bucketed masked dispatch over a ragged batch of rows —
+        prefill chunks and (spec mode) verify windows share it.  Each
+        row is ``(tokens, start, blocks)``: ``tokens`` (take,) land at
+        absolute positions ``[start, start+take)`` and are scattered
+        into ``blocks`` by the ``write_chunk_tokens`` fused into the
+        same dispatch (indices derived on-device from starts/lens/
+        table; padding lanes land in the scrubbed null block).  Rows
+        pad to a power-of-two row bucket, tokens to a length bucket,
+        tables to a block bucket; the trace signature is (row bucket,
+        length bucket, block bucket, all_logits).  Returns the dispatch
+        output — (rows, 1, V) last-valid logit slices, or (rows, c_pad)
+        per-lane greedy tokens when ``all_logits`` (the verify entry
+        argmaxes on-device: acceptance needs every window position but
+        only as token ids)."""
+        r_pad = self._bucket_rows(len(rows))
+        c_pad = self._bucket_len(max(len(t) for t, _, _ in rows))
+        nb_pad = self._bucket_blocks(max(len(b) for _, _, b in rows))
         toks = np.zeros((r_pad, c_pad), np.int32)
         starts = np.zeros((r_pad,), np.int32)
         # pad rows: 1 "valid" garbage token against the null table —
-        # shape-legal, masked everywhere, discarded below
+        # shape-legal, masked everywhere, discarded by the caller
         lens = np.ones((r_pad,), np.int32)
         bt = np.zeros((r_pad, nb_pad), np.int32)
-        for i, (r, take) in enumerate(sel):
-            st = self.prefilling[r]
-            toks[i, :take] = st.seq[st.done:st.done + take]
-            starts[i] = st.done
-            lens[i] = take
-            bt[i, :len(st.all_blocks)] = st.all_blocks
-        self._prefill_sigs.add((r_pad, c_pad, nb_pad))
-        logits, caches = self._prefill_paged(
+        for i, (t, start, blocks) in enumerate(rows):
+            toks[i, :len(t)] = t
+            starts[i] = start
+            lens[i] = len(t)
+            bt[i, :len(blocks)] = blocks
+        self._prefill_sigs.add((r_pad, c_pad, nb_pad, all_logits))
+        fn = self._prefill_verify if all_logits else self._prefill_paged
+        out, self.pools = fn(
             self.params, {"tokens": toks}, self.pools, jnp.asarray(bt),
             jnp.asarray(starts), jnp.asarray(lens), c_pad)
-        # batched writeback: flat (cache row/lane -> pool block/lane)
-        # index lists over every valid token of the dispatch, padded to
-        # a length bucket (entry-0 repeats are idempotent) so the
-        # scatter's own shape set stays bounded like the dispatch's
-        src_r, src_l, dst_b, dst_l = [], [], [], []
-        for i, (r, take) in enumerate(sel):
-            st = self.prefilling[r]
-            p = np.arange(st.done, st.done + take)
-            src_r.append(np.full(take, i, np.int32))
-            src_l.append(np.arange(take, dtype=np.int32))
-            dst_b.append(np.asarray(st.all_blocks, np.int32)[p // bs])
-            dst_l.append((p % bs).astype(np.int32))
-        src_r, src_l, dst_b, dst_l = map(np.concatenate,
-                                         (src_r, src_l, dst_b, dst_l))
-        pad = self._bucket_len(len(src_r)) - len(src_r)
-        if pad:
-            src_r, src_l, dst_b, dst_l = (
-                np.concatenate([a, np.repeat(a[:1], pad)])
-                for a in (src_r, src_l, dst_b, dst_l))
-        self.pools = write_chunk_tokens(self.pools, caches,
-                                        src_r, src_l, dst_b, dst_l)
-        arr = None
+        return out
+
+    def _chunk_rows(self, sel: List[tuple]) -> List[tuple]:
+        return [(self.prefilling[r].seq[self.prefilling[r].done:
+                                        self.prefilling[r].done + take],
+                 self.prefilling[r].done,
+                 self.prefilling[r].all_blocks)
+                for r, take in sel]
+
+    def _account_chunks(self, sel: List[tuple], tok_at, now: float) -> None:
+        """Advance chunk cursors after a dispatch; ``tok_at(i, take)``
+        returns row i's final-lane greedy token for the first output
+        token when the prefill completes."""
         for i, (r, take) in enumerate(sel):
             st = self.prefilling[r]
             if self.obs:
@@ -962,9 +1067,199 @@ class PagedLLMEngine(_EngineObsMixin):
             st.done += take
             self.prefill_tokens += take
             if st.done == len(st.seq):
-                if arr is None:
-                    arr = np.asarray(logits)
-                self._finish_prefill(r, int(np.argmax(arr[i, 0])), now)
+                self._finish_prefill(r, tok_at(i, take), now)
+
+    def _prefill_chunks(self, now: float) -> None:
+        """Advance every pending prefill by up to one chunk in ONE
+        ragged bucketed dispatch (spec-off path; spec mode fuses chunks
+        into the verify dispatch in ``_spec_step``)."""
+        sel, _ = self._select_chunks()
+        logits = self._ragged_dispatch(self._chunk_rows(sel),
+                                       all_logits=False)
+        arr: List = [None]
+
+        def tok_at(i, take):
+            if arr[0] is None:
+                arr[0] = np.asarray(logits)
+            return int(np.argmax(arr[0][i, 0]))
+
+        self._account_chunks(sel, tok_at, now)
+
+    # ------------------------------------------------------------ spec
+    def _spec_step(self, now: float) -> List[GenRequest]:
+        """Speculative step (drafter attached): ONE fused ragged
+        dispatch carries this step's prefill chunks AND one verify row
+        per decoding request — the last emitted token plus up to
+        ``spec_k`` drafted tokens, run through the masked prefill entry
+        at per-lane logits.  Acceptance keeps the longest drafted
+        prefix matching the target's own greedy argmax plus the bonus
+        token from the first mismatch, so output stays token-identical
+        to non-speculative greedy decode by construction; rejected
+        lanes roll back.  Drafted tokens are charged to the step token
+        budget AFTER prefill chunks (chunked prefill keeps priority),
+        but every decoding row always verifies at least its mandatory
+        one-token window, so decode advances every step regardless.
+        The per-token decode kernel is idle in spec mode — verify rows
+        replace the decode dispatch entirely."""
+        sel, budget_left = self._select_chunks()
+        verify = self._plan_verify(budget_left, now)
+        # planning may preempt (growth under a dry pool) — drop entries
+        # whose row was reclaimed
+        sel = [(r, t) for r, t in sel if r in self.prefilling]
+        verify = [(r, w) for r, w in verify if r in self.active]
+        if not sel and not verify:
+            return self._collect(now)
+        rows = self._chunk_rows(sel) + [
+            (np.asarray(w, np.int32), int(self.pos[r]), self.row_blocks[r])
+            for r, w in verify]
+        self._decode_batch_last = len(verify)
+        greedy = self._ragged_dispatch(rows, all_logits=True)
+        arr = np.asarray(greedy)                  # (r_pad, c_pad) tokens
+        nchunk = len(sel)
+        self._account_chunks(sel, lambda i, take: int(arr[i, take - 1]),
+                             now)
+        stale_b, stale_l = [], []
+        for j, (row, window) in enumerate(verify):
+            self._accept_verify(row, window, arr[nchunk + j], now,
+                                stale_b, stale_l)
+        if stale_b:
+            self.pools = invalidate_lanes(self.pools,
+                                          np.concatenate(stale_b),
+                                          np.concatenate(stale_l))
+        return self._collect(now)
+
+    def _plan_verify(self, budget: int, now: float) -> List[tuple]:
+        """Build this step's verify windows: for every decoding row
+        (oldest first) the mandatory last-emitted token plus up to
+        ``spec_k`` drafted tokens — capped by the request's remaining
+        ``max_new`` (acceptance may emit the whole window, which must
+        never overshoot the greedy stop) and by what's left of the
+        step token budget.  ``_prepare_verify_row`` then secures
+        private writable blocks for the window's lanes, shrinking the
+        window / evicting / preempting as needed.  -> [(row, window)]."""
+        plan: List[tuple] = []
+        for row in sorted(self.active, key=lambda r: self.active[r].rid):
+            if row not in self.active:
+                continue        # preempted while preparing an earlier row
+            req = self.active[row]
+            remaining = req.max_new - len(req.out_tokens)
+            cap = min(self.spec_k, remaining - 1, budget)
+            drafts = self.drafter.propose(self._seq_for(req), cap) \
+                if cap > 0 else []
+            take = self._prepare_verify_row(row, 1 + len(drafts), now)
+            if take is None:
+                continue        # the row itself got preempted
+            budget -= take - 1
+            plan.append((row, [req.out_tokens[-1]] + drafts[:take - 1]))
+        return plan
+
+    def _prepare_verify_row(self, row: int, take: int,
+                            now: float) -> Optional[int]:
+        """Secure private, writable KV lanes ``[pos, pos+take)`` for a
+        verify row.  Grows the block table (evicting cold cached blocks
+        first, then preempting the youngest — exactly the non-spec
+        decode growth policy); when the pool can't cover the *drafted*
+        lanes the window shrinks instead (speculation never preempts
+        anyone plain decode wouldn't); a write-range block still shared
+        with the radix tree or another request is copied to a private
+        block first — speculative writes must never touch refcount>1
+        blocks, their rollback would corrupt the other holders' KV.
+        Returns the (possibly shrunk) window length, or None if the row
+        itself was preempted."""
+        bs = self.block_size
+        while row in self.active:
+            P = int(self.pos[row])
+            blocks = self.row_blocks[row]
+            need = self.allocator.blocks_for(P + take)
+            if len(blocks) < need:
+                got = self._alloc_or_evict(1)
+                if got is not None:
+                    blocks.append(got[0])
+                    self.block_table[row, len(blocks) - 1] = got[0]
+                    continue
+                fit = len(blocks) * bs - P       # lanes already covered
+                if fit >= 1:
+                    take = min(take, fit)        # sacrifice drafts
+                    continue
+                if len(self.active) + len(self.prefilling) == 1:
+                    raise RuntimeError(
+                        "KV pool too small for a single request: "
+                        f"{self.allocator.num_usable} usable blocks")
+                self._preempt_youngest(now)
+                continue
+            shared = next((i for i in range(P // bs, need)
+                           if self.allocator.refcount(blocks[i]) > 1),
+                          None)
+            if shared is None:
+                return take
+            got = self._alloc_or_evict(1)
+            if got is None:
+                if len(self.active) + len(self.prefilling) == 1:
+                    raise RuntimeError(
+                        "KV pool too small for a single request: "
+                        f"{self.allocator.num_usable} usable blocks")
+                self._preempt_youngest(now)
+                continue
+            self.pools = copy_blocks(self.pools, [blocks[shared]],
+                                     [got[0]])
+            self.allocator.free([blocks[shared]])   # refcount>1: not released
+            blocks[shared] = got[0]
+            self.block_table[row, shared] = got[0]
+            self.cow_copies += 1
+        return None
+
+    def _accept_verify(self, row: int, window: List[int], row_greedy,
+                       now: float, stale_b: List, stale_l: List) -> None:
+        """Greedy acceptance + block-table rollback for one verify row.
+        ``window[0]`` is the last emitted token (its KV lands at lane
+        ``pos``), drafts follow; ``row_greedy`` (c_pad,) holds the
+        target's greedy token at every window lane.  Accept drafts
+        while draft == argmax, emit the bonus token from the first
+        mismatch, truncate at EOS (non-spec decode would have stopped
+        there).  KV lanes past the accepted cursor roll back: whole
+        tail blocks are freed (invalidated on release), stale lanes
+        inside the last kept block are appended to ``stale_b``/
+        ``stale_l`` for the step's single batched pos-invalidation."""
+        req = self.active[row]
+        take = len(window)
+        P = int(self.pos[row])
+        g = row_greedy[:take]
+        a = 0
+        while a < take - 1 and window[a + 1] == int(g[a]):
+            a += 1
+        newly = [int(t) for t in window[1:a + 1]] + [int(g[a])]
+        if self.eos_id is not None and self.eos_id in newly:
+            newly = newly[:newly.index(self.eos_id) + 1]
+        m = len(newly)
+        self.spec_verify_rows += 1
+        self.spec_proposed += take - 1
+        self.spec_accepted += a
+        self.spec_emitted += m
+        rolled = take - m
+        if rolled > 0:
+            self.spec_rollbacks += 1
+        for t in newly:
+            req.out_tokens.append(t)
+            self.generated_tokens += 1
+            self._note_token(req, now)
+        self.pos[row] = P + m
+        blocks = self.row_blocks[row]
+        keep = self.allocator.blocks_for(P + m)
+        if keep < len(blocks):
+            tail = blocks[keep:]
+            del blocks[keep:]
+            self.block_table[row, keep:] = 0
+            self._free_blocks(tail)
+        stale_lo = P + m
+        stale_hi = min(P + take, keep * self.block_size)
+        if stale_hi > stale_lo:
+            p = np.arange(stale_lo, stale_hi)
+            stale_b.append(np.asarray(blocks, np.int32)
+                           [p // self.block_size])
+            stale_l.append((p % self.block_size).astype(np.int32))
+        if self.obs:
+            self.obs.spec_verify(req.rid, now, proposed=take - 1,
+                                 accepted=a, emitted=m, rolled_back=rolled)
 
     def _finish_prefill(self, row: int, tok: int, now: float) -> None:
         """Last chunk spliced: emit the first token and move the row to
@@ -1057,7 +1352,19 @@ class PagedLLMEngine(_EngineObsMixin):
                 req.finished_at = now
                 done.append(req)
                 del self.active[row]
-                self._free_blocks(self.row_blocks.pop(row))
+                blocks = self.row_blocks.pop(row)
+                if self.prefix_cache is not None:
+                    # publish the GENERATED blocks too (prompt blocks
+                    # were published at prefill finish): a multi-turn
+                    # follow-up whose prompt embeds this turn's output
+                    # then hits the tree — and its history gives n-gram
+                    # drafting a hot lookup table on turn 2+.  Only
+                    # KV-valid lanes count: the last emitted token was
+                    # never written, so the key stops at ``pos``.
+                    kv = int(self.pos[row])
+                    self.prefix_cache.insert(self._seq_for(req)[:kv],
+                                             blocks, self.allocator)
+                self._free_blocks(blocks)
                 self.block_table[row, :] = 0
                 self.pos[row] = 0
                 self.finished_count += 1

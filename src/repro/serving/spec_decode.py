@@ -1,0 +1,189 @@
+"""Drafters for speculative decoding over the paged pool.
+
+Speculative decoding turns decode from one token per engine step per
+request into several: a cheap *drafter* proposes up to ``k`` tokens per
+request, the target model verifies the whole window — last emitted
+token + drafts — in ONE bucketed paged-prefill dispatch (the same
+masked variable-length entry chunked prefill uses), and the engine
+accepts the longest prefix whose drafts match the target's greedy
+argmax, plus one *bonus* token from the first mismatching position.
+Greedy acceptance makes the output token-identical to non-speculative
+greedy decode by construction: every emitted token is the target's own
+argmax given exactly the accepted history.
+
+This module owns the proposal side.  Two drafters ship behind one
+``Drafter`` interface:
+
+  * ``NgramDrafter`` — prompt-lookup / n-gram drafting (zero extra
+    weights): match the longest suffix n-gram of the request's
+    prompt+output history against an earlier occurrence in that same
+    history and propose the tokens that followed it.  Free, and hot on
+    repetition-heavy traffic (code, multi-turn chat, and — usefully for
+    CI — the short cycles untrained greedy models fall into).
+  * ``DraftModelDrafter`` — a smaller model proposes by running its own
+    greedy decode.  Cacheless by design: each proposal re-runs the
+    draft model's full forward over the (bucket-padded) history, so the
+    drafter carries no per-request state to preempt, roll back, or keep
+    coherent with the target's paged pool.  That costs k forwards per
+    proposal — acceptable for a draft model that is orders of magnitude
+    smaller than its target, and it keeps the engine's only mutable
+    spec state inside the target's own block tables.
+
+The verify/rollback half (block-table append + rollback, budget
+accounting, COW guard) lives in ``serving/server.PagedLLMEngine``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Drafter:
+    """Proposal interface: ``propose(history, k)`` returns up to ``k``
+    drafted continuation tokens for a request whose full token history
+    (prompt + emitted output) is ``history``.  Returning fewer than
+    ``k`` (or none) is normal — the engine then verifies a shorter
+    window (worst case just the mandatory last-emitted token, i.e.
+    plain one-token decode through the verify path).  Drafters must be
+    stateless per request: the engine may preempt, roll back, or resume
+    a request between any two calls."""
+
+    name = "none"
+
+    def propose(self, history: np.ndarray, k: int) -> List[int]:
+        raise NotImplementedError
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting (arXiv:2304.04487-style, vLLM's
+    ``ngram`` speculator): find the longest suffix n-gram (``max_n``
+    down to ``min_n``) of the history that also occurs earlier in the
+    history, and propose the tokens that followed its most recent
+    earlier occurrence."""
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, "
+                             f"got ({min_n}, {max_n})")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, history: np.ndarray, k: int) -> List[int]:
+        h = np.asarray(history)
+        L = len(h)
+        for n in range(min(self.max_n, L - 1), self.min_n - 1, -1):
+            tail = h[L - n:]
+            # candidate start positions of earlier occurrences, most
+            # recent first; an occurrence must end before the suffix
+            # starts a continuation, i.e. start <= L - n - 1
+            starts = np.flatnonzero(h[:L - n] == tail[0])
+            for s in starts[::-1]:
+                if np.array_equal(h[s:s + n], tail):
+                    # the match says h repeats with period d = distance
+                    # between occurrence and suffix; under that
+                    # hypothesis the continuation tiles the last d
+                    # tokens cyclically — a full k-token draft even
+                    # when the match sits within k tokens of the end
+                    # (on periodic text the most recent one always
+                    # does).  Wrong hypotheses cost nothing: the
+                    # verify pass rejects from the first mismatch.
+                    d = (L - n) - s
+                    return [int(h[L - d + (i % d)]) for i in range(k)]
+        return []
+
+
+class DraftModelDrafter(Drafter):
+    """Draft-model drafting: a smaller model (sharing the target's
+    tokenizer) proposes by greedy-extending the history ``k`` tokens,
+    one cacheless full forward per token.  Histories are right-padded
+    to power-of-two length buckets so the drafter compiles O(log
+    max_len) forward variants — causal attention makes right padding
+    inert for the last *valid* position's logits."""
+
+    name = "draft"
+
+    def __init__(self, model, params, max_len: int = 1024):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._forward = jax.jit(
+            lambda p, toks: model.forward(p, {"tokens": toks},
+                                          remat=False)[0])
+        self._sigs: set = set()
+
+    def _bucket(self, n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    def propose(self, history: np.ndarray, k: int) -> List[int]:
+        toks = list(np.asarray(history))
+        out: List[int] = []
+        for _ in range(k):
+            L = len(toks)
+            if L >= self.max_len:
+                break
+            pad = self._bucket(L)
+            self._sigs.add(pad)
+            row = np.zeros((1, pad), np.int32)
+            row[0, :L] = toks
+            logits = self._forward(self.params, jnp.asarray(row))
+            nxt = int(np.argmax(np.asarray(logits)[0, L - 1]))
+            out.append(nxt)
+            toks.append(nxt)
+        return out
+
+
+def layer_truncated_draft(model, params, num_layers: int):
+    """Early-exit self-drafting: build a draft (model, params) as the
+    first ``num_layers`` layers of the target.  The draft shares the
+    target's embedding/unembedding and its leading layers verbatim
+    (leaves are slices of the target's period-stacked params — no extra
+    weights stored), so its greedy proposals correlate with the
+    target's far better than an independently initialized small model,
+    with zero training.  Requires a uniform period-stacked stack (no
+    remainder layers) and ``num_layers`` a multiple of the period."""
+    import dataclasses
+
+    from repro.models import transformer as tf
+    from repro.models.api import Model
+
+    cfg = model.cfg
+    p, _, n_rem = tf.layout(cfg)
+    if n_rem or num_layers % p or not 0 < num_layers < cfg.num_layers:
+        raise ValueError(
+            f"cannot truncate {cfg.name} ({cfg.num_layers} layers, "
+            f"period {p}, {n_rem} remainder) to {num_layers} layers")
+    dcfg = dataclasses.replace(cfg, num_layers=num_layers,
+                               name=f"{cfg.name}-draft{num_layers}")
+    dparams = dict(params)
+    dparams["stack"] = {
+        "periods": jax.tree.map(lambda x: x[:num_layers // p],
+                                params["stack"]["periods"]),
+        "rem": {},
+    }
+    return Model(dcfg), dparams
+
+
+def make_drafter(mode: str, *, draft_model=None, draft_params=None,
+                 max_len: int = 1024,
+                 ngram_max_n: int = 3) -> Optional[Drafter]:
+    """``off`` -> None, ``ngram`` -> NgramDrafter, ``draft`` ->
+    DraftModelDrafter (requires ``draft_model``/``draft_params``)."""
+    if mode in (None, "off"):
+        return None
+    if mode == "ngram":
+        return NgramDrafter(max_n=ngram_max_n)
+    if mode == "draft":
+        if draft_model is None or draft_params is None:
+            raise ValueError("spec_decode='draft' needs draft_model and "
+                             "draft_params")
+        return DraftModelDrafter(draft_model, draft_params, max_len=max_len)
+    raise ValueError(f"spec_decode must be 'off', 'ngram' or 'draft', "
+                     f"got {mode!r}")

@@ -67,6 +67,23 @@ SCHEMA = {
     "decode_compiles": GaugeSpec("distinct decode shapes traced so far"),
     "decode_kernel": GaugeSpec("1 when decode routes through the Pallas "
                                "paged-attention kernel", PAGED),
+    "admission_skips": GaugeSpec("head-of-line skips: admissions where a "
+                                 "blocked queue head was passed over for "
+                                 "a later admissible request (lifetime)",
+                                 PAGED),
+    "spec_decode": GaugeSpec('speculative decoding drafter: "off" | '
+                             '"ngram" | "draft"', PAGED, types=(str,)),
+    "spec_k": GaugeSpec("max drafted tokens per request per step "
+                        "(0 when spec decoding is off)", PAGED),
+    "accepted_tokens_per_step": GaugeSpec(
+        "mean tokens emitted per verify row (accepted drafts + bonus); "
+        "1.0 == plain decode, the speculative speedup upper bound",
+        PAGED),
+    "draft_hit_rate": GaugeSpec("drafted tokens accepted / drafted "
+                                "tokens proposed", PAGED),
+    "spec_rollbacks": GaugeSpec("verify rows that discarded "
+                                "speculatively written lanes (lifetime)",
+                                PAGED),
 }
 
 

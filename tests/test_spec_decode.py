@@ -1,0 +1,348 @@
+"""Speculative decoding tests: draft-and-verify over the paged pool.
+
+The contract under test: speculative decoding — any drafter, any
+``spec_k`` — must be a pure scheduling change.  Greedy acceptance makes
+that checkable bit-for-bit: every emitted token is the target's own
+argmax given exactly the accepted history, so spec-on output must match
+spec-off output exactly, through preemption-and-resume, prefix-cache
+sharing, and copy-on-write divergence.  On top of identity: the
+drafters themselves (n-gram cyclic continuation, cacheless draft-model
+greedy, early-exit layer truncation), block-table rollback bookkeeping
+(allocator refcount/free-list invariants under random speculative
+lifecycles, radix-shared blocks never freed by rollback), and the spec
+gauges landing in ``stats()``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_cfg
+from repro.models.api import Model
+from repro.serving.kvcache import BlockAllocator
+from repro.serving.loadgen import repetitive_workload, \
+    shared_prefix_workload
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.server import PagedLLMEngine
+from repro.serving.spec_decode import (DraftModelDrafter, NgramDrafter,
+                                       layer_truncated_draft, make_drafter)
+
+
+@pytest.fixture(scope="module")
+def qwen_model(rng_key):
+    cfg = reduced_cfg("qwen3-0.6b")
+    model = Model(cfg)
+    return model, model.init(rng_key)
+
+
+def _drain(engine, max_steps=2000):
+    outs = {}
+    for _ in range(max_steps):
+        for r in engine.step():
+            outs[r.rid] = list(r.out_tokens)
+        if engine.idle:
+            break
+    assert engine.idle
+    return outs
+
+
+# ------------------------------------------------------------- drafters
+
+
+def test_ngram_drafter_rides_a_cycle():
+    """On periodic history the drafter must propose a full-k cyclic
+    continuation, not stop at the most recent occurrence's cut-off."""
+    d = NgramDrafter(max_n=3)
+    h = np.array([7, 8, 9] * 5, np.int32)      # period 3
+    assert d.propose(h, 7) == [7, 8, 9, 7, 8, 9, 7]
+    assert d.propose(h, 2) == [7, 8]
+
+
+def test_ngram_drafter_prefers_longest_suffix_match():
+    """A max_n match must beat a shorter, more recent one: after
+    ...1,2,3...9,2,3 the 2-gram (2,3) continuation comes from the
+    earlier 1,2,3,4 run, not from the 1-gram match on the final 3."""
+    d = NgramDrafter(max_n=3, min_n=1)
+    h = np.array([1, 2, 3, 4, 5, 9, 2, 3], np.int32)
+    assert d.propose(h, 2) == [4, 5]
+
+
+def test_ngram_drafter_novel_token_proposes_nothing():
+    d = NgramDrafter()
+    assert d.propose(np.array([1, 2, 3, 4, 5], np.int32), 4) == []
+    assert d.propose(np.array([3], np.int32), 4) == []
+
+
+def test_draft_model_drafter_matches_its_own_greedy(qwen_model):
+    """The cacheless drafter's proposals must equal running the draft
+    model's greedy decode by hand (bucket padding must be inert)."""
+    model, params = qwen_model
+    d = DraftModelDrafter(model, params, max_len=64)
+    h = np.arange(1, 12, dtype=np.int32)       # length 11 -> bucket 16
+    got = d.propose(h, 3)
+    toks = list(h)
+    for _ in range(3):
+        logits = model.forward(params, {"tokens": jnp.asarray(
+            np.asarray(toks, np.int32)[None, :])}, remat=False)[0]
+        nxt = int(np.argmax(np.asarray(logits)[0, -1]))
+        assert got[len(toks) - len(h)] == nxt
+        toks.append(nxt)
+    assert len(d._sigs) == 1                   # one padded shape compiled
+
+
+def test_layer_truncated_draft_shares_leading_layers(qwen_model):
+    model, params = qwen_model
+    cfg = model.cfg
+    dmodel, dparams = layer_truncated_draft(model, params,
+                                            cfg.num_layers // 2)
+    assert dmodel.cfg.num_layers == cfg.num_layers // 2
+    assert dparams["embed"] is params["embed"]  # shared, not copied
+    with pytest.raises(ValueError):
+        layer_truncated_draft(model, params, 0)
+    with pytest.raises(ValueError):
+        layer_truncated_draft(model, params, cfg.num_layers)
+
+
+def test_make_drafter_modes(qwen_model):
+    model, params = qwen_model
+    assert make_drafter("off") is None
+    assert make_drafter(None) is None
+    assert make_drafter("ngram").name == "ngram"
+    assert make_drafter("draft", draft_model=model,
+                        draft_params=params).name == "draft"
+    with pytest.raises(ValueError, match="draft_model"):
+        make_drafter("draft")
+    with pytest.raises(ValueError, match="spec_decode"):
+        make_drafter("beam")
+
+
+# ------------------------------------------- engine-level token identity
+
+
+def _spec_engine(model, params, *, num_blocks=64, max_len=96, **kw):
+    return PagedLLMEngine(model, params, num_blocks=num_blocks,
+                          block_size=8, max_batch=8, max_len=max_len,
+                          prefill_chunk=16, step_token_budget=64, **kw)
+
+
+def _submit_all(engine, prompts, max_new):
+    for p in prompts:
+        engine.submit(p, max_new=max_new)
+
+
+@pytest.fixture(scope="module")
+def spec_baseline(qwen_model):
+    """Spec-off greedy outputs for the shared repetitive workload."""
+    model, params = qwen_model
+    wl = repetitive_workload(num_requests=4, vocab_size=model.cfg.vocab_size,
+                             prompt_len=12, max_new=16, seed=3)
+    engine = _spec_engine(model, params)
+    _submit_all(engine, wl.prompts, 16)
+    return wl, _drain(engine)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_ngram_token_identity_k_sweep(qwen_model, spec_baseline, k):
+    """Every spec_k must emit exactly the spec-off tokens, and the
+    verify path must actually run (verify rows counted)."""
+    model, params = qwen_model
+    wl, want = spec_baseline
+    engine = _spec_engine(model, params, spec_decode="ngram", spec_k=k)
+    _submit_all(engine, wl.prompts, 16)
+    assert _drain(engine) == want
+    s = engine.stats()
+    assert s["spec_decode"] == "ngram" and s["spec_k"] == k
+    assert engine.spec_verify_rows > 0
+    assert s["accepted_tokens_per_step"] >= 1.0   # bonus token floor
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_draft_model_token_identity(qwen_model, spec_baseline, k):
+    """Early-exit self-draft lane: token identity plus a live hit rate
+    gauge (shared leading layers correlate with the target)."""
+    model, params = qwen_model
+    wl, want = spec_baseline
+    dmodel, dparams = layer_truncated_draft(model, params,
+                                            model.cfg.num_layers // 2)
+    engine = _spec_engine(model, params, spec_decode="draft", spec_k=k,
+                          draft_model=dmodel, draft_params=dparams)
+    _submit_all(engine, wl.prompts, 16)
+    assert _drain(engine) == want
+    assert 0.0 <= engine.stats()["draft_hit_rate"] <= 1.0
+
+
+def test_spec_identity_under_preemption(qwen_model):
+    """A pool too small for every request forces preempt-and-resume
+    mid-speculation; re-chunking from the accepted cursor must not
+    change a token vs the spec-off run under the same tight pool."""
+    model, params = qwen_model
+    wl = repetitive_workload(num_requests=5, vocab_size=model.cfg.vocab_size,
+                             prompt_len=12, max_new=14, seed=1)
+    runs = {}
+    for mode in ("off", "ngram"):
+        kw = {} if mode == "off" else dict(spec_decode="ngram", spec_k=4)
+        engine = _spec_engine(model, params, num_blocks=13, max_len=40,
+                              **kw)
+        _submit_all(engine, wl.prompts, 14)
+        runs[mode] = _drain(engine)
+        if mode == "ngram":
+            assert engine.preemptions > 0     # the scenario actually bites
+            assert engine.allocator.num_live == 0   # full drain releases
+    assert runs["ngram"] == runs["off"]
+
+
+def test_spec_identity_with_prefix_cache_cow(qwen_model):
+    """Shared-prefix traffic with the radix cache on: verify windows
+    write through COW-guarded blocks; output must match the spec-off
+    cache-on run AND the cache-off run."""
+    model, params = qwen_model
+    wl = shared_prefix_workload(num_requests=4, prefix_len=20, suffix_len=3,
+                                vocab_size=model.cfg.vocab_size,
+                                num_prefixes=1, seed=2)
+    runs = {}
+    for name, kw in (("off", dict(prefix_cache=False)),
+                     ("pc", dict(prefix_cache=True)),
+                     ("pc+spec", dict(prefix_cache=True,
+                                      spec_decode="ngram", spec_k=4))):
+        engine = _spec_engine(model, params, **kw)
+        _submit_all(engine, wl.prompts, 10)
+        runs[name] = _drain(engine)
+    assert runs["pc+spec"] == runs["pc"] == runs["off"]
+
+
+def test_generated_blocks_published_to_radix_tree(qwen_model):
+    """Satellite: at request finish the full blocks of prompt+output
+    land in the radix tree, so a follow-up request whose prompt extends
+    the finished sequence hits cache past the original prompt."""
+    model, params = qwen_model
+    engine = _spec_engine(model, params, prefix_cache=True,
+                          spec_decode="ngram", spec_k=4)
+    prompt = np.arange(1, 17, dtype=np.int32)        # 2 full blocks
+    engine.submit(prompt, max_new=10)
+    (out,) = _drain(engine).values()
+    cached_after_finish = engine.prefix_cache.cached_blocks
+    # prompt (2 blocks) + generated tokens' full blocks: (16+10-1)//8
+    assert cached_after_finish >= (len(prompt) + len(out) - 1) // 8
+    follow = np.concatenate([prompt, np.asarray(out[:8], np.int32)])
+    engine.submit(follow, max_new=4)
+    _drain(engine)
+    assert engine.prefix_cache.hit_tokens >= 16      # beyond the prompt
+
+
+# --------------------------------- rollback/allocator property invariants
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=3),
+                min_size=4, max_size=40),
+       st.integers(min_value=6, max_value=14))
+def test_speculative_lifecycle_allocator_invariants(ops, num_blocks):
+    """Random propose/accept/rollback/preempt sequences against the
+    real allocator + radix tree, mimicking the engine's bookkeeping:
+    free-list conservation holds at every step, rollback only ever
+    releases private tail blocks, and tree-shared blocks keep a
+    refcount floor of 1 until eviction."""
+    bs = 4
+    a = BlockAllocator(num_blocks=num_blocks, block_size=bs)
+    tree = PrefixCache(block_size=bs)
+    rng = np.random.default_rng(len(ops) * 1000 + num_blocks)
+    blocks, pos, toks = [], 0, []             # one simulated request
+
+    def check():
+        assert a.num_free + a.num_live == a.num_usable
+        for b in blocks[:pos // bs]:
+            assert a.refcount(b) >= 1
+
+    for op in ops:
+        if op == 0:                            # propose: grow + write k
+            k = int(rng.integers(1, 6))
+            need = -(-(pos + k) // bs)
+            while len(blocks) < need and a.num_free > 0:
+                blocks.extend(a.alloc(1))
+            k = min(k, len(blocks) * bs - pos)
+            if k <= 0:
+                continue
+            toks.extend(int(t) for t in rng.integers(0, 50, k))
+            pos += k
+        elif op == 1:                          # accept m<=window, rollback
+            m = int(rng.integers(0, 3))
+            newpos = max(0, pos - m)
+            keep = -(-newpos // bs) if newpos else 0
+            # engine invariant: rollback frees only PRIVATE tail blocks
+            tail = blocks[keep:]
+            del blocks[keep:]
+            released = a.free(tail)
+            for b in tail:
+                if b not in released:          # still tree-held
+                    assert a.refcount(b) >= 1
+            del toks[newpos:]
+            pos = newpos
+        elif op == 2 and pos >= bs:            # finish: publish + release
+            tree.insert(toks, blocks, a)
+            a.free(blocks)
+            for b in tree.blocks():
+                assert a.refcount(b) >= 1      # tree holds survive release
+            blocks, pos, toks = [], 0, []
+        elif op == 3:                          # preempt: drop everything
+            a.free(blocks)
+            blocks, pos, toks = [], 0, []
+        check()
+    a.free(blocks)
+    assert a.num_free + a.num_live == a.num_usable
+
+
+# ----------------------------------------------------------- spec gauges
+
+
+def test_spec_stats_gauges(qwen_model):
+    model, params = qwen_model
+    engine = _spec_engine(model, params, spec_decode="ngram", spec_k=3)
+    wl = repetitive_workload(num_requests=2, vocab_size=model.cfg.vocab_size,
+                             prompt_len=12, max_new=12, seed=0)
+    _submit_all(engine, wl.prompts, 12)
+    _drain(engine)
+    s = engine.stats()
+    from repro.serving.stats_schema import validate
+    validate(s)
+    assert s["spec_decode"] == "ngram" and s["spec_k"] == 3
+    assert s["accepted_tokens_per_step"] >= 1.0
+    assert 0.0 <= s["draft_hit_rate"] <= 1.0
+    assert s["spec_rollbacks"] >= 0
+    off = _spec_engine(model, params)
+    off_s = off.stats()
+    validate(off_s)
+    assert off_s["spec_decode"] == "off" and off_s["spec_k"] == 0
+
+
+def test_spec_obs_counters_and_trace(qwen_model):
+    """Under full instrumentation the spec counters move with the
+    engine's own gauges and spec_verify instants land in a valid
+    Chrome trace export."""
+    from repro.obs import Observability, validate_chrome_trace
+    model, params = qwen_model
+    obs = Observability.create(trace=True, trace_mode="sim")
+    engine = _spec_engine(model, params, spec_decode="ngram", spec_k=4,
+                          obs=obs)
+    wl = repetitive_workload(num_requests=2, vocab_size=model.cfg.vocab_size,
+                             prompt_len=12, max_new=12, seed=5)
+    now = 0.0
+    for p in wl.prompts:
+        engine.submit(p, max_new=12, now=now)
+    outs = {}
+    for _ in range(2000):
+        now += 0.5
+        for r in engine.step(now=now):
+            outs[r.rid] = list(r.out_tokens)
+        if engine.idle:
+            break
+    assert engine.idle and len(outs) == 2
+    snap = obs.metrics.snapshot()
+    vals = {e["name"]: e["value"] for e in snap["counters"]}
+    assert vals.get("engine_spec_proposed_total", 0) == engine.spec_proposed
+    assert vals.get("engine_spec_accepted_total", 0) == engine.spec_accepted
+    trace = obs.trace.to_chrome()
+    assert validate_chrome_trace(trace, list(outs)) == []
+    spec_events = [ev for ev in trace["traceEvents"]
+                   if ev.get("name") == "spec_verify"]
+    assert len(spec_events) > 0
+    assert all("accepted" in ev.get("args", {}) for ev in spec_events)
