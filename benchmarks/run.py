@@ -453,9 +453,13 @@ def bench_serving_decode():
     os.environ["REPRO_FORCE_PALLAS_INTERPRET"] = "1"
     try:
         def drive(**kw):
+            # decode_fusion off: this lane compares the SEPARATE decode
+            # program's execution layers (jnp gather vs Pallas kernel);
+            # the fused ragged dispatch would bypass it entirely
             engine = PagedLLMEngine(model, params, num_blocks=num_blocks,
                                     block_size=8, max_batch=8,
-                                    max_len=max_len, **kw)
+                                    max_len=max_len, decode_fusion=False,
+                                    **kw)
             # warmup pass compiles every trace outside the timed window
             for p, n in zip(wl.prompts, wl.max_news):
                 engine.submit(p, max_new=n)
@@ -616,9 +620,13 @@ def bench_serving_batching():
     num_blocks = slots * cache_max // block_size
 
     def paged(**kw):
+        # fusion off: this lane gates the SCHEDULER cold
+        # (compile-inclusive), and fused decode swaps one decode program
+        # for per-bucket all_logits variants — the fused path is gated
+        # end to end by serving_cluster and the identity tests
         return PagedLLMEngine(model, params, num_blocks=num_blocks,
                               block_size=block_size, max_batch=8,
-                              max_len=cache_max, **kw)
+                              max_len=cache_max, decode_fusion=False, **kw)
 
     serial_res, serial_eng, serial_outs = drive(
         lambda: paged(scheduler="serial"))
@@ -736,7 +744,10 @@ def bench_serving_spec():
                "prefill_compiles": s["prefill_compiles"]}
         return res, outs
 
-    off_res, off_outs = drive(spec_decode="off")
+    # the plain-decode baseline keeps the separate decode program
+    # (fusion off): the speedup gate isolates speculation itself, not
+    # speculation + dispatch fusion
+    off_res, off_outs = drive(spec_decode="off", decode_fusion=False)
     ngram_res, ngram_outs = drive(spec_decode="ngram", spec_k=spec_k)
     report = {
         "arch": cfg.name,
@@ -893,6 +904,143 @@ def bench_serving_obs():
 
 
 # ----------------------------------------------------------------------
+# 7h. Cluster serving tier: broker-fed multi-replica engines behind the
+#     occupancy-aware balancer, prefix-affinity routing on vs off,
+#     multi-tenant bursty workload -> BENCH_cluster.json.
+# ----------------------------------------------------------------------
+
+
+def bench_serving_cluster():
+    from repro.configs.base import get_config
+    from repro.models.api import Model
+    from repro.serving.cluster import Rejected, ServingCluster
+    from repro.serving.loadgen import multi_tenant_workload
+    from repro.serving.server import PagedLLMEngine
+
+    smoke = bool(globals().get("_SMOKE"))
+    out_path = "BENCH_cluster.json"
+    print("\n# cluster serving tier: N broker-fed replicas, prefix-"
+          "affinity routing on vs off, multi-tenant bursty workload "
+          f"({'smoke' if smoke else 'full'} config); acceptance: token-"
+          "identical to one engine, affinity p95 TTFT <= off, per-"
+          "replica hit_rate gain >= 0.05")
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # pool sizing IS the experiment: 6 tenants x 4 prefix blocks = 24
+    # cached blocks, vs 32 usable per replica.  A replica that sees
+    # every tenant (affinity off) can't hold all prefixes under live-
+    # request pressure and thrashes its LRU; with affinity each replica
+    # owns a tenant subset that fits.
+    num_tenants, prefix_len, block_size = 6, 32, 8
+    num_blocks, max_len, max_batch = 33, 96, 4
+    num_bursts = 3 if smoke else 5
+    burst_size = 4 if smoke else 6
+    gap_steps = 2
+    wl = multi_tenant_workload(num_tenants=num_tenants,
+                               num_bursts=num_bursts,
+                               burst_size=burst_size,
+                               prefix_len=prefix_len,
+                               vocab_size=cfg.vocab_size,
+                               max_new=4 if smoke else 8, seed=0)
+
+    def drive(replicas, affinity):
+        cluster = ServingCluster(
+            lambda i: PagedLLMEngine(model, params, num_blocks=num_blocks,
+                                     block_size=block_size,
+                                     max_batch=max_batch, max_len=max_len,
+                                     prefix_cache=True, prefill_chunk=32,
+                                     step_token_budget=64),
+            replicas, affinity=affinity, queue_limit=64, seed=0,
+            obs=False)
+
+        def run():
+            # logical step clock: submit/step times count cluster steps,
+            # so TTFT-in-steps is deterministic (the gate can be exact
+            # instead of wall-noise tolerant); wall time is kept for the
+            # throughput numbers only
+            t0 = time.time()
+            done, steps, cids = [], 0, []
+            for prompts, news in zip(wl.bursts, wl.burst_news):
+                for p, n in zip(prompts, news):
+                    try:
+                        cids.append(cluster.submit(p, max_new=n,
+                                                   now=float(steps)))
+                    except Rejected:
+                        cids.append(None)
+                tgt = steps + gap_steps
+                while not cluster.idle and steps < tgt:
+                    done.extend(cluster.step(now=float(steps)))
+                    steps += 1
+            while not cluster.idle:
+                done.extend(cluster.step(now=float(steps)))
+                steps += 1
+            return done, cids, steps, time.time() - t0
+
+        run()                              # compile + cache warmup pass
+        done, cids, steps, wall = run()    # measured warm pass
+        outs = {r.cid: r.out_tokens for r in done}
+        ttfts = [r.first_token_at - r.submitted for r in done]
+        toks = sum(len(t) for t in outs.values())
+        s = cluster.stats()
+        hit = [e.stats()["hit_rate"] for e in cluster.engines]
+        res = {"tok_per_s": round(toks / wall, 2), "steps": steps,
+               "tokens": toks, "rejected_429": s["rejected_429"],
+               "affinity_hits": s["affinity_hits"],
+               "affinity_misses": s["affinity_misses"],
+               "p95_ttft_steps": round(float(np.percentile(ttfts, 95)), 2),
+               "mean_hit_rate": round(float(np.mean(hit)), 3),
+               "hit_rate_per_replica": [round(h, 3) for h in hit]}
+        return res, [outs.get(c) for c in cids]
+
+    single_res, single_outs = drive(1, affinity=True)
+    arms = {}
+    for n in (2,) if smoke else (2, 4):
+        arms[f"r{n}_affinity_off"], off_outs = drive(n, affinity=False)
+        arms[f"r{n}_affinity_on"], on_outs = drive(n, affinity=True)
+        arms[f"r{n}_affinity_off"]["token_identical"] = \
+            off_outs == single_outs
+        arms[f"r{n}_affinity_on"]["token_identical"] = \
+            on_outs == single_outs
+
+    on2, off2 = arms["r2_affinity_on"], arms["r2_affinity_off"]
+    report = {
+        "arch": cfg.name,
+        "config": {"num_tenants": num_tenants, "prefix_len": prefix_len,
+                   "block_size": block_size, "num_blocks": num_blocks,
+                   "max_batch": max_batch, "num_bursts": num_bursts,
+                   "burst_size": burst_size, "gap_steps": gap_steps,
+                   "smoke": smoke},
+        "single": single_res,
+        **arms,
+        "token_identical": all(a["token_identical"]
+                               for a in arms.values()),
+        "p95_ttft_ratio": round(on2["p95_ttft_steps"] /
+                                max(off2["p95_ttft_steps"], 1e-9), 3),
+        "hit_rate_gain": round(on2["mean_hit_rate"] -
+                               off2["mean_hit_rate"], 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("serving_cluster.single.tok_per_s", single_res["tok_per_s"],
+         f"{single_res['steps']} steps")
+    for name, a in arms.items():
+        emit(f"serving_cluster.{name}.p95_ttft_steps", a["p95_ttft_steps"],
+             f"hit_rate {a['mean_hit_rate']} "
+             f"(per replica {a['hit_rate_per_replica']}) "
+             f"429s {a['rejected_429']}")
+    emit("serving_cluster.token_identical", report["token_identical"],
+         "every replica count and routing mode must match one engine")
+    emit("serving_cluster.p95_ttft_ratio", report["p95_ttft_ratio"],
+         "affinity on / off at 2 replicas; acceptance: <= 1.0")
+    emit("serving_cluster.hit_rate_gain", report["hit_rate_gain"],
+         "mean per-replica radix hit_rate, affinity on - off; "
+         "acceptance: >= 0.05")
+    emit("serving_cluster.report", out_path, "BENCH_cluster.json artifact")
+
+
+# ----------------------------------------------------------------------
 # 8. Roofline report (deliverable g) — regenerated from results/dryrun.
 # ----------------------------------------------------------------------
 
@@ -942,6 +1090,7 @@ BENCHES = {
     "serving_batching": bench_serving_batching,
     "serving_spec": bench_serving_spec,
     "serving_obs": bench_serving_obs,
+    "serving_cluster": bench_serving_cluster,
     "roofline": bench_roofline,
 }
 

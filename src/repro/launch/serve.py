@@ -24,9 +24,19 @@ prompt-lookup drafting (``--spec-k`` drafted tokens per request per
 step, verified in the fused ragged dispatch, token-identical to
 ``off``); ``--spec-decode draft`` drafts with an early-exit truncation
 of the target (its first ``--draft-layers`` layers — no extra weights).
+``--decode-fusion off`` reverts spec-off decode to the separate decode
+program instead of riding the fused ragged dispatch as length-1 verify
+windows.
+``--replicas N`` (paged engine only) serves through the cluster tier
+(``serving/cluster.py``): N broker-fed engine replicas behind the
+occupancy-aware balancer, with ``--affinity on`` (default) routing each
+request to the replica already holding its longest cached prefix;
+saturation rejects submissions with 429 semantics instead of queueing
+unboundedly.
 Queue/pool/prefix-cache/compile gauges are printed every
 ``--stats-every`` steps and at exit.  ``--metrics`` dumps the full
-Prometheus text exposition at exit; ``--trace-out PATH`` writes a
+Prometheus text exposition at exit (with ``--replicas`` the per-replica
+registries merged into one fleet page); ``--trace-out PATH`` writes a
 Chrome trace-event JSON of the run (open in https://ui.perfetto.dev).
 """
 from __future__ import annotations
@@ -40,6 +50,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models.api import Model
 from repro.obs import Observability
+from repro.serving.cluster import Rejected, ServingCluster
 from repro.serving.server import LLMEngine, PagedLLMEngine
 from repro.serving.spec_decode import layer_truncated_draft
 
@@ -57,7 +68,17 @@ def _fmt_stats(stats: dict) -> str:
                 f"loads={stats.get('replica_loads', [])}")
         if isinstance(stats.get("engine"), dict):
             line += "\n" + _fmt_stats(stats["engine"])
+        for rid, es in sorted(stats.get("engines", {}).items()):
+            line += f"\n  r{rid} " + _fmt_stats(es)
         return line
+    if stats.get("engine") == "cluster":
+        return (f"[cluster] replicas={stats.get('replicas', 0)} "
+                f"affinity={'on' if stats.get('affinity') else 'off'} "
+                f"hits={stats.get('affinity_hits', 0)} "
+                f"misses={stats.get('affinity_misses', 0)} "
+                f"429={stats.get('rejected_429', 0)} "
+                f"submitted={stats.get('submitted', 0)} "
+                f"finished={stats.get('finished', 0)}")
     line = (f"[{stats.get('engine', '?')}] "
             f"queue={stats.get('queue_depth', 0)} "
             f"active={stats.get('active', 0)} "
@@ -99,6 +120,7 @@ def build_engine(args, model, params, obs=None):
                               spec_k=args.spec_k,
                               draft_model=draft_model,
                               draft_params=draft_params,
+                              decode_fusion=args.decode_fusion == "on",
                               obs=obs)
     if args.spec_decode != "off":
         raise SystemExit("--spec-decode needs the paged engine")
@@ -148,6 +170,18 @@ def main():
                          "continuous scheduler only)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max drafted tokens per request per step")
+    ap.add_argument("--decode-fusion", choices=("on", "off"), default="on",
+                    help="run spec-off decode through the fused ragged "
+                         "dispatch as length-1 verify windows — one XLA "
+                         "program per step (paged engine, continuous "
+                         "scheduler only)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through the cluster tier with N broker-"
+                         "fed engine replicas (paged engine only)")
+    ap.add_argument("--affinity", choices=("on", "off"), default="on",
+                    help="prefix-affinity routing: send each request to "
+                         "the replica already holding its longest cached "
+                         "prefix (cluster tier only)")
     ap.add_argument("--draft-layers", type=int, default=1,
                     help="layers kept in the --spec-decode draft "
                          "truncation")
@@ -175,6 +209,14 @@ def main():
     if args.engine is None:
         args.engine = "paged" if model.supports_paged else "slot"
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.replicas > 1:
+        if args.engine != "paged":
+            raise SystemExit("--replicas needs the paged engine")
+        if args.trace_out:
+            raise SystemExit("--trace-out is per-engine; not supported "
+                             "with --replicas")
+        _serve_cluster(args, cfg, model, params)
+        return
     obs = None
     if args.metrics or args.trace_out:
         obs = Observability.create(trace=args.trace_out is not None)
@@ -208,6 +250,53 @@ def main():
         print(f"trace: {n} events -> {args.trace_out}")
     if obs is not None and args.metrics:
         print(obs.metrics.render(), end="")
+
+
+def _serve_cluster(args, cfg, model, params):
+    """Drive ``--requests`` prompts through the multi-replica cluster
+    tier: a shared-prefix-flavoured workload (half the prompt is one of
+    a few tenant prefixes) so ``--affinity on`` has something to route
+    on; saturation surfaces as counted 429s, never a stall."""
+    cluster = ServingCluster(
+        lambda i: build_engine(args, model, params),
+        args.replicas, affinity=args.affinity == "on",
+        seed=args.seed, obs=args.metrics)
+    rng = np.random.default_rng(args.seed)
+    tenants = [rng.integers(1, cfg.vocab_size,
+                            max(args.prompt_len // 2, 1)).astype(np.int32)
+               for _ in range(min(4, args.requests))]
+    t0 = time.time()
+    rejected = 0
+    for i in range(args.requests):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=(max(args.prompt_len
+                                      - len(tenants[0]), 1),))
+        prompt = np.concatenate([tenants[i % len(tenants)],
+                                 tail.astype(np.int32)])
+        try:
+            cluster.submit(prompt, max_new=args.max_new,
+                           now=time.time() - t0)
+        except Rejected:
+            rejected += 1
+    finished = []
+    steps = 0
+    while not cluster.idle:
+        finished.extend(cluster.step(now=time.time() - t0))
+        steps += 1
+        if args.stats_every and steps % args.stats_every == 0:
+            print(_fmt_stats(cluster.stats()))
+    dt = time.time() - t0
+    total_new = sum(len(r.out_tokens) for r in finished)
+    print(f"{len(finished)} requests ({rejected} rejected 429), "
+          f"{total_new} tokens in {dt:.2f}s ({total_new/dt:.1f} tok/s, "
+          f"{steps} cluster steps, replicas={args.replicas})")
+    print(_fmt_stats(cluster.stats()))
+    print(_fmt_stats(cluster.balancer.stats()))
+    for r in sorted(finished, key=lambda r: r.cid)[:3]:
+        print(f"  req {r.cid}: {len(r.out_tokens)} tokens "
+              f"{r.out_tokens[:8]}... r{r.replica} via {r.routed_by}")
+    if args.metrics:
+        print(cluster.merged_metrics().render(), end="")
 
 
 if __name__ == "__main__":

@@ -42,11 +42,16 @@ class EngineObs:
                  "c_spec_proposed", "c_spec_accepted", "c_spec_rollbacks",
                  "h_spec_accepted")
 
-    def __init__(self, bundle, kind: str):
+    def __init__(self, bundle, kind: str, replica=None):
         self.bundle = bundle
         self.trace = bundle.trace
         m = bundle.metrics
-        lab = {"engine": kind}
+        # engine metrics carry the replica id in the cluster tier so N
+        # replicas can share one merged registry without colliding; the
+        # request_* histograms stay unlabeled on purpose — they merge
+        # into the fleet-wide latency distributions.
+        lab = {"engine": kind} if replica is None else \
+            {"engine": kind, "replica": str(replica)}
         self.c_requests = m.counter(
             "engine_requests_total", "requests submitted", lab)
         self.c_admissions = m.counter(

@@ -66,10 +66,18 @@ class Broker:
         return hash(key) % self.num_partitions
 
     def produce(self, value: Any, key: Optional[str] = None,
-                timestamp: float = 0.0) -> Tuple[int, int]:
-        """-> (partition, offset); raises PartitionFull on backpressure."""
+                timestamp: float = 0.0,
+                partition: Optional[int] = None) -> Tuple[int, int]:
+        """-> (partition, offset); raises PartitionFull on backpressure.
+        ``partition`` overrides key/random assignment — the cluster
+        tier routes by replica affinity, where the *balancer* picks the
+        partition and the broker must not re-shuffle it."""
         with self._lock:
-            p = self.partition_for(key)
+            p = self.partition_for(key) if partition is None \
+                else int(partition)
+            if not 0 <= p < self.num_partitions:
+                raise ValueError(f"partition {p} out of range "
+                                 f"[0, {self.num_partitions})")
             if len(self._logs[p]) >= self.max_depth:
                 # capacity pressure: truncate what every known group has
                 # consumed (Kafka-style retention — never on commit, so a

@@ -46,6 +46,30 @@ import dataclasses
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 
+def chain_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Rolling per-block prefix keys: ``out[m] = hash((out[m-1],
+    tokens[m*bs:(m+1)*bs]))`` over the *full* blocks of ``tokens`` —
+    the hashed form of exactly the per-block token tuples the radix
+    tree keys on, with the chain making each hash identify the whole
+    prefix up to that block (two different prefixes sharing one block's
+    tokens get different chain values).
+
+    This is the cluster routing tier's affinity key: hashes are cheap
+    to index fleet-wide, and because routing only *picks a replica*
+    (the replica's own radix tree still compares exact token tuples),
+    a hash collision can at worst misroute one request to a colder
+    replica — it can never serve wrong KV.  Python's int-tuple hash is
+    deterministic across processes (``PYTHONHASHSEED`` only perturbs
+    str/bytes), so two brokers compute identical chains."""
+    bs = int(block_size)
+    out: List[int] = []
+    h = 0
+    for m in range(len(tokens) // bs):
+        h = hash((h, tuple(int(t) for t in tokens[m * bs:(m + 1) * bs])))
+        out.append(h)
+    return out
+
+
 @dataclasses.dataclass
 class MatchResult:
     """Longest cached prefix of a token sequence.

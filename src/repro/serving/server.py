@@ -230,13 +230,16 @@ class _EngineObsMixin:
     obs: Optional[EngineObs] = None
     _engine_kind = "slot"
 
-    def attach_obs(self, obs) -> None:
+    def attach_obs(self, obs, replica=None) -> None:
         """Bind (or re-bind) an ``Observability`` bundle; ``None``
         detaches.  Benchmarks re-bind a fresh bundle between the cold
         (compile-inclusive) and warm measured passes so the histograms
-        cover exactly one pass."""
-        self.obs = EngineObs(obs, self._engine_kind) if obs is not None \
-            else None
+        cover exactly one pass.  ``replica`` adds a per-replica label
+        to the engine metrics (cluster tier) — request latency
+        histograms stay unlabeled either way so replica snapshots
+        merge into one fleet-wide distribution."""
+        self.obs = EngineObs(obs, self._engine_kind, replica) \
+            if obs is not None else None
 
     def _note_token(self, req: GenRequest, now: float) -> None:
         """One output token emitted for ``req`` at ``now``: track the
@@ -488,6 +491,14 @@ class PagedLLMEngine(_EngineObsMixin):
     the Pallas paged-attention kernel (``kernels/paged_attention.py``),
     False forces the jnp block gather, None follows the global kernel
     switch (TPU / ``REPRO_USE_KERNELS``).
+
+    ``decode_fusion`` (default True, continuous scheduler only)
+    completes the Sarathi fusion: spec-OFF decode rows ride the SAME
+    ragged verify dispatch as prefill chunks, as length-1 windows —
+    one XLA program per step whether speculation is on or off, and the
+    dedicated decode entry (plus its Pallas kernel) stays idle.  Set
+    False to restore the separate decode dispatch (the execution-layer
+    benchmarks compare decode paths through it).
     """
 
     _engine_kind = "paged"
@@ -504,6 +515,7 @@ class PagedLLMEngine(_EngineObsMixin):
                  spec_decode: str = "off", spec_k: int = 4,
                  draft_model=None, draft_params=None,
                  admission_window: int = 4,
+                 decode_fusion: bool = True,
                  obs=None):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
@@ -561,6 +573,17 @@ class PagedLLMEngine(_EngineObsMixin):
                                     draft_params=draft_params,
                                     max_len=max_len)
         self.spec_decode = spec_decode
+        # decode fusion (Sarathi, completed): spec-OFF decode rows ride
+        # the same ragged verify dispatch as prefill chunks, as length-1
+        # windows (the last emitted token, zero drafts) — ONE XLA
+        # program per step whether speculation is on or off.  The
+        # serial scheduler keeps the separate decode dispatch (it is
+        # the per-shape-accounting baseline), as does
+        # ``decode_fusion=False`` (the execution-layer benchmarks
+        # compare the dedicated decode dispatch paths).
+        self.decode_fusion = bool(decode_fusion)
+        self._fused_decode = scheduler == "continuous" and \
+            (self.drafter is not None or self.decode_fusion)
         self.spec_k = spec_k
         self.spec_proposed = 0       # drafted tokens sent to verify
         self.spec_accepted = 0       # drafted tokens that matched argmax
@@ -704,6 +727,21 @@ class PagedLLMEngine(_EngineObsMixin):
     def idle(self) -> bool:
         return not self.queue and not self.active and not self.prefilling
 
+    def prefix_probe(self, prompt) -> int:
+        """How many leading tokens of ``prompt`` this engine's radix
+        cache could serve RIGHT NOW, without admitting anything —
+        side-effect free (no LRU touch, no hit/miss accounting).  The
+        cluster routing tier probes replicas with this to find (or
+        verify) the longest cached match; 0 when the prefix cache is
+        off or cold.  The last token is reserved exactly as the admit
+        path reserves it: its logits produce the first output token,
+        so it can never be served from cache."""
+        if self.prefix_cache is None:
+            return 0
+        tokens = np.asarray(prompt, np.int32)[:-1]
+        m = self.prefix_cache.probe(tokens)
+        return len(m.blocks) * self.block_size + m.partial_len
+
     def stats(self) -> Dict[str, float]:
         """Gauges per the module-level stats schema."""
         alloc = self.allocator
@@ -730,6 +768,7 @@ class PagedLLMEngine(_EngineObsMixin):
             "prefill_compiles": len(self._prefill_sigs),
             "decode_compiles": len(self._decode_sigs),
             "decode_kernel": int(self._decode_kernel_on()),
+            "decode_fusion": int(self._fused_decode),
             "admission_skips": self.admission_skips,
             "spec_decode": self.spec_decode,
             "spec_k": self.spec_k if self.drafter is not None else 0,
@@ -749,6 +788,10 @@ class PagedLLMEngine(_EngineObsMixin):
         that never dispatched."""
         from repro.kernels.ops import kernel_path_active, kernels_enabled
 
+        if self._fused_decode:
+            # decode rides the fused ragged dispatch — the dedicated
+            # decode entry (and its kernel) never runs
+            return False
         requested = bool(self.decode_kernel) if \
             self.decode_kernel is not None else kernels_enabled()
         return requested and not self.model.cfg.kv_cache_quant and \
@@ -868,7 +911,7 @@ class PagedLLMEngine(_EngineObsMixin):
 
     def _step(self, now: float) -> List[GenRequest]:
         self._admit_all(now)
-        if self.drafter is not None:
+        if self._fused_decode:
             return self._spec_step(now)
         done: List[GenRequest] = []
         prefilled = bool(self.prefilling)
@@ -1029,7 +1072,11 @@ class PagedLLMEngine(_EngineObsMixin):
         argmaxes on-device: acceptance needs every window position but
         only as token ids)."""
         r_pad = self._bucket_rows(len(rows))
-        c_pad = self._bucket_len(max(len(t) for t, _, _ in rows))
+        # decode-only fused steps are all length-1 windows: dispatch at
+        # c_pad=1 instead of padding every lane up to the first length
+        # bucket (8x wasted attention compute on the hottest step shape)
+        longest = max(len(t) for t, _, _ in rows)
+        c_pad = 1 if longest == 1 else self._bucket_len(longest)
         nb_pad = self._bucket_blocks(max(len(b) for _, _, b in rows))
         toks = np.zeros((r_pad, c_pad), np.int32)
         starts = np.zeros((r_pad,), np.int32)
@@ -1071,8 +1118,9 @@ class PagedLLMEngine(_EngineObsMixin):
 
     def _prefill_chunks(self, now: float) -> None:
         """Advance every pending prefill by up to one chunk in ONE
-        ragged bucketed dispatch (spec-off path; spec mode fuses chunks
-        into the verify dispatch in ``_spec_step``)."""
+        ragged bucketed dispatch (unfused path: serial scheduler or
+        ``decode_fusion=False``; fused mode carries chunks in the
+        verify dispatch in ``_spec_step``)."""
         sel, _ = self._select_chunks()
         logits = self._ragged_dispatch(self._chunk_rows(sel),
                                        all_logits=False)
@@ -1087,11 +1135,12 @@ class PagedLLMEngine(_EngineObsMixin):
 
     # ------------------------------------------------------------ spec
     def _spec_step(self, now: float) -> List[GenRequest]:
-        """Speculative step (drafter attached): ONE fused ragged
-        dispatch carries this step's prefill chunks AND one verify row
-        per decoding request — the last emitted token plus up to
-        ``spec_k`` drafted tokens, run through the masked prefill entry
-        at per-lane logits.  Acceptance keeps the longest drafted
+        """Fused step (speculation on OR plain decode fusion): ONE
+        ragged dispatch carries this step's prefill chunks AND one
+        verify row per decoding request — the last emitted token plus
+        up to ``spec_k`` drafted tokens (zero with no drafter: plain
+        decode as a length-1 window), run through the masked prefill
+        entry at per-lane logits.  Acceptance keeps the longest drafted
         prefix matching the target's own greedy argmax plus the bonus
         token from the first mismatch, so output stays token-identical
         to non-speculative greedy decode by construction; rejected
@@ -1143,7 +1192,10 @@ class PagedLLMEngine(_EngineObsMixin):
                 continue        # preempted while preparing an earlier row
             req = self.active[row]
             remaining = req.max_new - len(req.out_tokens)
-            cap = min(self.spec_k, remaining - 1, budget)
+            # no drafter: plain fused decode — the mandatory one-token
+            # window alone (the row still joins the ragged dispatch)
+            cap = 0 if self.drafter is None else \
+                min(self.spec_k, remaining - 1, budget)
             drafts = self.drafter.propose(self._seq_for(req), cap) \
                 if cap > 0 else []
             take = self._prepare_verify_row(row, 1 + len(drafts), now)
@@ -1231,13 +1283,17 @@ class PagedLLMEngine(_EngineObsMixin):
         if self.eos_id is not None and self.eos_id in newly:
             newly = newly[:newly.index(self.eos_id) + 1]
         m = len(newly)
-        self.spec_verify_rows += 1
-        self.spec_proposed += take - 1
-        self.spec_accepted += a
-        self.spec_emitted += m
         rolled = take - m
-        if rolled > 0:
-            self.spec_rollbacks += 1
+        if self.drafter is not None:
+            # plain fused decode (drafter off) must not shift the spec
+            # gauges: its windows are always length 1, accept 0 drafts,
+            # emit 1 — counting them would dilute every spec ratio
+            self.spec_verify_rows += 1
+            self.spec_proposed += take - 1
+            self.spec_accepted += a
+            self.spec_emitted += m
+            if rolled > 0:
+                self.spec_rollbacks += 1
         for t in newly:
             req.out_tokens.append(t)
             self.generated_tokens += 1
@@ -1257,7 +1313,7 @@ class PagedLLMEngine(_EngineObsMixin):
             stale_b.append(np.asarray(blocks, np.int32)
                            [p // self.block_size])
             stale_l.append((p % self.block_size).astype(np.int32))
-        if self.obs:
+        if self.obs and self.drafter is not None:
             self.obs.spec_verify(req.rid, now, proposed=take - 1,
                                  accepted=a, emitted=m, rolled_back=rolled)
 

@@ -8,7 +8,8 @@ renders it (``_fmt_stats``), and benchmarks persist it into the
 used to live at the top of ``serving/server.py`` — as code, so CI can
 catch drift between the engines, the renderer, and this list
 (``validate`` is asserted against both engines' output in
-``tests/test_obs.py``).
+``tests/test_obs.py`` and against ``ServingCluster.stats()`` in
+``tests/test_cluster.py``).
 
 Consumers must still read snapshots with ``.get()``: dicts persisted by
 *older* engines may omit newer keys.  ``validate`` is strict in the
@@ -25,6 +26,10 @@ from typing import Tuple
 
 BOTH = ("slot", "paged")
 PAGED = ("paged",)
+CLUSTER = ("cluster",)
+#: every stats() producer kind: the two engines plus the multi-replica
+#: serving tier (``serving/cluster.py``)
+KINDS = BOTH + CLUSTER
 
 NUM = (int, float)
 
@@ -37,7 +42,8 @@ class GaugeSpec:
 
 
 SCHEMA = {
-    "engine": GaugeSpec('"slot" | "paged"', types=(str,)),
+    "engine": GaugeSpec('"slot" | "paged" | "cluster"', KINDS,
+                        types=(str,)),
     "queue_depth": GaugeSpec("requests waiting for admission"),
     "active": GaugeSpec("requests currently decoding"),
     "prefilling": GaugeSpec("admitted requests still streaming prompt "
@@ -49,7 +55,8 @@ SCHEMA = {
     "pool_occupancy": GaugeSpec("used_blocks / total_blocks"),
     "admissions": GaugeSpec("lifetime admissions"),
     "preemptions": GaugeSpec("lifetime preempt-and-requeues"),
-    "finished": GaugeSpec("lifetime completed requests"),
+    "finished": GaugeSpec("lifetime completed requests",
+                          BOTH + CLUSTER),
     "peak_active": GaugeSpec("high-water concurrent requests", PAGED),
     "prefill_tokens": GaugeSpec("prompt tokens actually computed", PAGED),
     "prefix_cache": GaugeSpec("1 when the radix prefix cache is on",
@@ -67,6 +74,10 @@ SCHEMA = {
     "decode_compiles": GaugeSpec("distinct decode shapes traced so far"),
     "decode_kernel": GaugeSpec("1 when decode routes through the Pallas "
                                "paged-attention kernel", PAGED),
+    "decode_fusion": GaugeSpec("1 when spec-off decode rides the fused "
+                               "ragged dispatch as length-1 verify "
+                               "windows (one XLA program per step)",
+                               PAGED),
     "admission_skips": GaugeSpec("head-of-line skips: admissions where a "
                                  "blocked queue head was passed over for "
                                  "a later admissible request (lifetime)",
@@ -84,6 +95,21 @@ SCHEMA = {
     "spec_rollbacks": GaugeSpec("verify rows that discarded "
                                 "speculatively written lanes (lifetime)",
                                 PAGED),
+    # ---- cluster tier (``serving/cluster.py``) ----
+    "replicas": GaugeSpec("engine replicas in the fleet", CLUSTER),
+    "affinity": GaugeSpec("1 when prefix-affinity routing is on",
+                          CLUSTER),
+    "affinity_hits": GaugeSpec("dispatches routed to the replica "
+                               "already holding the request's longest "
+                               "cached prefix (lifetime)", CLUSTER),
+    "affinity_misses": GaugeSpec("dispatches with no usable prefix "
+                                 "owner — fell back to the balancer "
+                                 "policy (lifetime)", CLUSTER),
+    "rejected_429": GaugeSpec("submissions refused with backpressure: "
+                              "balancer saturated or broker partition "
+                              "full (lifetime)", CLUSTER),
+    "submitted": GaugeSpec("submissions accepted into the broker "
+                           "(lifetime)", CLUSTER),
 }
 
 
@@ -92,8 +118,8 @@ def validate(stats: dict) -> dict:
     its engine kind declares, each with a schema-conformant type.
     Returns ``stats`` unchanged so calls chain."""
     engine = stats.get("engine")
-    if engine not in BOTH:
-        raise ValueError(f"stats['engine'] must be one of {BOTH}, "
+    if engine not in KINDS:
+        raise ValueError(f"stats['engine'] must be one of {KINDS}, "
                          f"got {engine!r}")
     missing = [k for k, spec in SCHEMA.items()
                if engine in spec.engines and k not in stats]

@@ -56,6 +56,11 @@ def booleans() -> _Strategy:
     return _Strategy(lambda rng: bool(rng.integers(2)))
 
 
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda rng: tuple(s.example_from(rng) for s in strategies))
+
+
 def settings(**_kwargs):
     """No-op decorator factory (max_examples/deadline have no meaning
     for the fixed-count fallback runner)."""
@@ -100,7 +105,8 @@ def install_if_missing() -> bool:
     mod.given = given
     mod.settings = settings
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "lists", "sampled_from", "booleans"):
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans",
+                 "tuples"):
         setattr(st, name, globals()[name])
     mod.strategies = st
     sys.modules["hypothesis"] = mod

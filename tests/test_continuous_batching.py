@@ -219,7 +219,10 @@ def test_step_token_budget_bounds_prefill_and_decode_advances(qwen_model):
 def test_continuous_retrace_gauge_matches_jit_cache(qwen_model):
     """The ragged chunk dispatch's compile gauge must agree with jax's
     real jit cache, and bucketing must keep the trace count far below
-    one-per-(rows, length, blocks) combination on a mixed workload."""
+    one-per-(rows, length, blocks) combination on a mixed workload.
+    With decode fusion (the continuous default) decode rides the verify
+    entry as length-1 windows: the gauge spans BOTH prefill jit entries
+    and the separate decode program never compiles at all."""
     model, params = qwen_model
     wl = mixed_length_workload(num_requests=10,
                                vocab_size=model.cfg.vocab_size,
@@ -228,9 +231,45 @@ def test_continuous_retrace_gauge_matches_jit_cache(qwen_model):
     eng, _ = _drive(model, params, wl.prompts, wl.max_news,
                     prefill_chunk=16)
     s = eng.stats()
-    assert s["prefill_compiles"] == eng._prefill_paged._cache_size()
-    assert s["prefill_compiles"] <= 6        # (rows, len, blocks) buckets
-    assert s["decode_compiles"] == 1
+    assert s["decode_fusion"] == 1
+    assert s["prefill_compiles"] == (eng._prefill_paged._cache_size()
+                                     + eng._prefill_verify._cache_size())
+    # fused dispatches add decode-only (c_pad=1) signatures next to the
+    # chunk buckets — still O(#row x #len x #block buckets), nowhere
+    # near one trace per step
+    assert s["prefill_compiles"] <= 12
+    assert s["decode_compiles"] == 0         # fused: one program per step
+
+    # fusion off: back to the separate decode program (exactly one trace)
+    off, _ = _drive(model, params, wl.prompts, wl.max_news,
+                    prefill_chunk=16, decode_fusion=False)
+    so = off.stats()
+    assert so["decode_fusion"] == 0
+    assert so["prefill_compiles"] == off._prefill_paged._cache_size()
+    assert so["decode_compiles"] == 1
+
+
+def test_decode_fusion_token_identity_and_no_growth(qwen_model):
+    """Decode fusion is a pure dispatch change: token-identical to the
+    unfused continuous scheduler, and re-running the same workload on
+    the warm engine compiles nothing new (one XLA program per step in
+    steady state — the retrace gauge is the assertion)."""
+    model, params = qwen_model
+    wl = mixed_length_workload(num_requests=6,
+                               vocab_size=model.cfg.vocab_size,
+                               min_len=4, max_len=40, min_new=2, max_new=8,
+                               seed=11)
+    _, unfused = _drive(model, params, wl.prompts, wl.max_news,
+                        decode_fusion=False)
+    eng, fused = _drive(model, params, wl.prompts, wl.max_news)
+    assert fused == unfused
+    warm = eng.stats()["prefill_compiles"]
+    for p, n in zip(wl.prompts, wl.max_news):
+        eng.submit(p, max_new=n)
+    again = _drain(eng)
+    assert list(again.values()) == list(fused.values())
+    assert eng.stats()["prefill_compiles"] == warm
+    assert eng.stats()["decode_compiles"] == 0
 
 
 # ------------------------------------------------------ knob validation

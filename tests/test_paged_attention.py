@@ -231,22 +231,28 @@ def test_explicit_and_off_bucket_specs(qwen_model):
 
 def test_decode_kernel_token_identity(qwen_model, monkeypatch):
     """Pallas decode kernel (interpret) vs jnp gather: token-identical
-    through the engine, including across preempt-resume."""
+    through the engine, including across preempt-resume.  Decode fusion
+    is forced off — the kernel only runs in the separate decode program,
+    and fused dispatch would silently skip it (stats()["decode_kernel"]
+    would read 0)."""
     monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
     model, params = qwen_model
     cfg = model.cfg
     rng = np.random.default_rng(2)
     prompts = [rng.integers(1, cfg.vocab_size, 6 + 2 * i).astype(np.int32)
                for i in range(4)]
-    _, off = _drive(model, params, prompts, decode_kernel=False)
-    eng, on = _drive(model, params, prompts, decode_kernel=True)
+    _, off = _drive(model, params, prompts, decode_kernel=False,
+                    decode_fusion=False)
+    eng, on = _drive(model, params, prompts, decode_kernel=True,
+                     decode_fusion=False)
     assert on == off
     assert eng.stats()["decode_kernel"] == 1
 
     # tight pool: the kernel path must survive preempt-and-requeue too
     def tight(dk):
         e = PagedLLMEngine(model, params, num_blocks=10, block_size=4,
-                           max_batch=8, max_len=64, decode_kernel=dk)
+                           max_batch=8, max_len=64, decode_kernel=dk,
+                           decode_fusion=False)
         for p in prompts:
             e.submit(p, max_new=10)
         return e, _drain(e)

@@ -238,12 +238,16 @@ def test_engine_stats_and_balancer_report(qwen_model):
     engine = PagedLLMEngine(model, params, num_blocks=16, block_size=8,
                             max_batch=4, max_len=64)
     engine.submit(np.arange(1, 9, dtype=np.int32), max_new=4)
-    # one continuous step = admit + prefill + first decode: the 8-token
-    # prompt fills one block and the same-step decode grows a second
+    # step 1 = admit + prefill (+ first token): the 8-token prompt fills
+    # one block; the fused decode window can't ride the same dispatch
+    # that produced its token, so the second block grows on step 2
     engine.step()
     s = engine.stats()
     assert s["engine"] == "paged" and s["active"] == 1
     assert s["prefilling"] == 0
+    assert s["used_blocks"] == 1 and 0 < s["pool_occupancy"] < 1
+    engine.step()
+    s = engine.stats()
     assert s["used_blocks"] == 2 and 0 < s["pool_occupancy"] < 1
 
     lb = LoadBalancer(num_replicas=2)
