@@ -1041,6 +1041,113 @@ def bench_serving_cluster():
 
 
 # ----------------------------------------------------------------------
+# 7i. Sliding-window paged serving: eager out-of-window block freeing vs
+#     window-blind accounting, long-context windowed workload
+#     -> BENCH_window.json.
+# ----------------------------------------------------------------------
+
+
+def bench_serving_window():
+    import dataclasses
+
+    from repro.configs.base import get_config
+    from repro.models.api import Model
+    from repro.serving.loadgen import windowed_long_context_workload
+    from repro.serving.server import LLMEngine, PagedLLMEngine
+
+    smoke = bool(globals().get("_SMOKE"))
+    out_path = "BENCH_window.json"
+    print("\n# sliding-window paged serving: window-aware vs window-blind "
+          f"block accounting ({'smoke' if smoke else 'full'} config); "
+          "acceptance: token-identical to slot engine, peak-block "
+          "capacity gain >= 1.5x")
+    window, block_size = 8, 4
+    # pure sliding-window stack: the gemma3 local-attention layer kind
+    # on every layer, so the live window bounds every KV pool
+    cfg = dataclasses.replace(get_config("gemma3-4b").reduced(),
+                              layer_kinds=("attn_local",),
+                              sliding_window=window)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    requests = 4 if smoke else 8
+    prompt_len = 20
+    max_new = 24 if smoke else 48
+    wl = windowed_long_context_workload(num_requests=requests,
+                                        vocab_size=cfg.vocab_size,
+                                        window=window,
+                                        prompt_len=prompt_len,
+                                        max_new=max_new, seed=0)
+    max_len = wl.max_final_len + block_size
+    # ample pool: both accounting modes run preemption-free, so the
+    # peak-block comparison isolates accounting, not scheduler noise
+    num_blocks = 1 + requests * -(-max_len // block_size)
+
+    def drive(engine):
+        for p, n in zip(wl.prompts, wl.max_news):
+            engine.submit(p, max_new=n)
+        t0 = time.time()
+        done, peak_blocks = [], 0
+        paged = hasattr(engine, "allocator")
+        while not engine.idle:
+            done.extend(engine.step())
+            if paged:
+                peak_blocks = max(peak_blocks,
+                                  engine.stats()["used_blocks"])
+        wall = time.time() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        res = {"tok_per_s": round(toks / wall, 2),
+               "wall_s": round(wall, 3), "tokens": toks}
+        if paged:
+            s = engine.stats()
+            res.update(peak_used_blocks=peak_blocks,
+                       preemptions=s["preemptions"],
+                       window_blocks_freed=s["window_blocks_freed"])
+        return res, {r.rid: r.out_tokens for r in done}
+
+    slot_res, slot_outs = drive(LLMEngine(model, params,
+                                          num_slots=requests,
+                                          cache_max=max_len))
+
+    def paged(**kw):
+        return PagedLLMEngine(model, params, num_blocks=num_blocks,
+                              block_size=block_size, max_batch=8,
+                              max_len=max_len, **kw)
+
+    win_res, win_outs = drive(paged())
+    blind_res, blind_outs = drive(paged(window_accounting=False))
+
+    report = {
+        "arch": cfg.name,
+        "config": {"window": window, "block_size": block_size,
+                   "num_blocks": num_blocks, "requests": requests,
+                   "prompt_len": prompt_len, "max_new": max_new,
+                   "max_len": max_len, "smoke": smoke},
+        "slot": slot_res,
+        "windowed": win_res,
+        "window_blind": blind_res,
+        "token_identical": (win_outs == slot_outs
+                            and blind_outs == slot_outs),
+        "capacity_gain": round(blind_res["peak_used_blocks"] /
+                               max(win_res["peak_used_blocks"], 1), 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("serving_window.windowed.peak_used_blocks",
+         win_res["peak_used_blocks"],
+         f"window_blocks_freed {win_res['window_blocks_freed']} "
+         f"preemptions {win_res['preemptions']}")
+    emit("serving_window.blind.peak_used_blocks",
+         blind_res["peak_used_blocks"],
+         "window-blind accounting holds the whole growing context")
+    emit("serving_window.capacity_gain", report["capacity_gain"],
+         "peak blocks blind/windowed; acceptance: >= 1.5x")
+    emit("serving_window.token_identical", report["token_identical"],
+         "both accounting modes must match the slot engine exactly")
+    emit("serving_window.report", out_path, "BENCH_window.json artifact")
+
+
+# ----------------------------------------------------------------------
 # 8. Roofline report (deliverable g) — regenerated from results/dryrun.
 # ----------------------------------------------------------------------
 
@@ -1091,6 +1198,7 @@ BENCHES = {
     "serving_spec": bench_serving_spec,
     "serving_obs": bench_serving_obs,
     "serving_cluster": bench_serving_cluster,
+    "serving_window": bench_serving_window,
     "roofline": bench_roofline,
 }
 

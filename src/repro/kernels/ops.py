@@ -79,17 +79,18 @@ def paged_attention(q, k_pool, v_pool, kpos_pool, block_table, pos, *,
                        window)
 
 
-@jax.jit
-def _pp_ref_jit(q, k, v, kpos, qpos):
-    return _ref.paged_prefill_ref(q, k, v, kpos, qpos)
+@functools.partial(jax.jit, static_argnames=("window",))
+def _pp_ref_jit(q, k, v, kpos, qpos, window):
+    return _ref.paged_prefill_ref(q, k, v, kpos, qpos, window=window)
 
 
-def paged_prefill(q, k, v, kpos, qpos):
+def paged_prefill(q, k, v, kpos, qpos, *, window: int = 0):
     """Ragged-batch chunked-prefill attention: q (B,S,H,hd) against
     assembled keys k/v (B,L,KV,hd) with absolute key/query positions
     kpos (B,L) / qpos (B,S) -> (B,S,H,hd).  Per-row raggedness (chunk
     length, prefix size, position offset) lives entirely in the position
-    arrays — see ``ref.paged_prefill_ref`` for the semantics.
+    arrays — see ``ref.paged_prefill_ref`` for the semantics.  ``window``
+    > 0 applies the sliding-window band mask over absolute positions.
 
     No Pallas kernel exists for this op yet: the decode kernel's
     online-softmax block loop extends to S>1 query lanes but hasn't been
@@ -97,7 +98,7 @@ def paged_prefill(q, k, v, kpos, qpos):
     call sites are already kernel-shaped — when the kernel lands, only
     this function changes.
     """
-    return _pp_ref_jit(q, k, v, kpos, qpos)
+    return _pp_ref_jit(q, k, v, kpos, qpos, window)
 
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 32):

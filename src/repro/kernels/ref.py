@@ -68,7 +68,7 @@ def paged_attention_ref(q, k_pool, v_pool, kpos_pool, block_table, pos, *,
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
-def paged_prefill_ref(q, k, v, kpos, qpos):
+def paged_prefill_ref(q, k, v, kpos, qpos, *, window: int = 0):
     """Ragged-batch chunked-prefill attention — the continuous-batching
     read: every row is one request's prefill chunk, with per-row chunk
     lengths, block tables, and position offsets all encoded in the two
@@ -81,9 +81,12 @@ def paged_prefill_ref(q, k, v, kpos, qpos):
     padding, not-yet-written lanes); qpos (B,S) int32 absolute query
     positions.  Causality is over absolute positions: key lane s is
     visible to query lane t iff ``kpos[s] >= 0 and kpos[s] <= qpos[t]``.
-    GQA: H % KV == 0.  Scores in fp32; the value contraction runs in
-    v.dtype (matching the slot-engine prefill numerics so chunked and
-    whole-prompt paths stay token-identical).  -> (B,S,H,hd).
+    ``window`` > 0 adds the sliding-window band term over the same
+    absolute positions (``qpos[t] - kpos[s] < window``), matching
+    ``flash_attention_ref``/``paged_attention_ref``.  GQA: H % KV == 0.
+    Scores in fp32; the value contraction runs in v.dtype (matching the
+    slot-engine prefill numerics so chunked and whole-prompt paths stay
+    token-identical).  -> (B,S,H,hd).
     """
     b, s, h, hd = q.shape
     kv = k.shape[2]
@@ -95,6 +98,8 @@ def paged_prefill_ref(q, k, v, kpos, qpos):
     kp = kpos[:, None, None, :]
     qp = qpos[:, None, :, None]
     mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask = mask & (qp - kp < window)
     sc = jnp.where(mask, sc, NEG_INF)
     m = jnp.max(sc, -1, keepdims=True)
     e = jnp.exp(sc - jax.lax.stop_gradient(m))

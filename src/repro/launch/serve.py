@@ -93,6 +93,10 @@ def _fmt_stats(stats: dict) -> str:
         line += (f" hit={stats.get('hit_rate', 0.0):.2f} "
                  f"cached={stats.get('cached_blocks', 0)} "
                  f"evict={stats.get('evictions', 0)}")
+    if stats.get("window_blocks_freed"):
+        line += f" wfreed={stats.get('window_blocks_freed', 0)}"
+    if stats.get("state_slots_used"):
+        line += f" slots={stats.get('state_slots_used', 0)}"
     return line
 
 
@@ -121,6 +125,8 @@ def build_engine(args, model, params, obs=None):
                               draft_model=draft_model,
                               draft_params=draft_params,
                               decode_fusion=args.decode_fusion == "on",
+                              window_accounting=args.window_accounting
+                              == "on",
                               obs=obs)
     if args.spec_decode != "off":
         raise SystemExit("--spec-decode needs the paged engine")
@@ -175,6 +181,12 @@ def main():
                          "dispatch as length-1 verify windows — one XLA "
                          "program per step (paged engine, continuous "
                          "scheduler only)")
+    ap.add_argument("--window-accounting", choices=("on", "off"),
+                    default="on",
+                    help="eagerly free KV blocks that slide out of a "
+                         "bounded attention window (sliding-window "
+                         "stacks; off = window-blind block accounting, "
+                         "the capacity baseline)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through the cluster tier with N broker-"
                          "fed engine replicas (paged engine only)")

@@ -151,26 +151,59 @@ class Model:
     # ------------------------------------------------------------ paged
     @property
     def supports_paged(self) -> bool:
-        """Block-paged decode covers pure-attention decoder-only stacks.
-        SSM/RWKV states are O(1) per request (nothing to page) and the
-        enc-dec/vision paths carry non-token caches — those stay on the
-        slot engine."""
+        """Block-paged decode covers decoder-only token stacks: attention
+        layers (global or sliding-window) page their KV through the block
+        pool, and recurrent layers (mamba/rwkv6) carry fixed-size
+        per-request state slots beside it.  The enc-dec/vision paths
+        carry non-token caches — those stay on the slot engine."""
         cfg = self.cfg
         return (not cfg.is_encoder_decoder and cfg.frontend == "none"
-                and all(k == "attn" for k in cfg.kinds_for_layers))
+                and all(k in ("attn", "attn_local", "mamba", "rwkv6")
+                        for k in cfg.kinds_for_layers))
+
+    @property
+    def paged_has_state(self) -> bool:
+        """Does the paged stack carry recurrent (non-KV) layer state?
+        State cannot be rebuilt from cached blocks, so engines must
+        disable radix prefix reuse and draft-rollback spec decoding."""
+        return self.supports_paged and any(
+            k in ("mamba", "rwkv6") for k in self.cfg.kinds_for_layers)
+
+    def paged_live_window(self) -> Optional[int]:
+        """Token window bounding every layer's KV residency, or None when
+        some layer reads unboundedly far back (any global-attention
+        layer).  When bounded, a request only ever needs
+        ceil(W/block_size)+1 live blocks — engines may eagerly free
+        blocks that have slid wholly out of the window."""
+        cfg = self.cfg
+        if not self.supports_paged:
+            return None
+        w = 1                                  # mamba/rwkv6: state, no KV
+        for k in cfg.kinds_for_layers:
+            if k == "attn":
+                return None
+            if k == "attn_local":
+                if not cfg.sliding_window:
+                    return None                # window 0 = global
+                w = max(w, cfg.sliding_window)
+        return w
 
     def pool_init(self, num_blocks: int, block_size: int,
-                  dtype: Optional[str] = None):
+                  dtype: Optional[str] = None, state_batch: int = 1):
         """Concrete block pools for every layer (pos lanes -1).  Block 0
-        is the reserved null block — allocators must never hand it out."""
+        is the reserved null block — allocators must never hand it out.
+        ``state_batch`` sizes the recurrent-state slot axis (engine rows
+        plus one trash row); ignored by pure-attention stacks."""
         if not self.supports_paged:
             raise ValueError(f"{self.cfg.name}: paged decode unsupported "
-                             "(needs a pure-attention decoder-only stack)")
+                             "(needs a decoder-only token stack)")
         return tf.stack_pool_init(self.cfg, num_blocks, block_size,
-                                  jnp.dtype(dtype or self.cfg.dtype))
+                                  jnp.dtype(dtype or self.cfg.dtype),
+                                  state_batch=state_batch)
 
     def prefill_paged(self, params, batch, pools, block_table, start_pos, *,
-                      cache_max: int, seq_len=None, all_logits: bool = False):
+                      cache_max: int, seq_len=None, all_logits: bool = False,
+                      state_rows=None):
         """Padding-masked position-offset prefill — the paged engine's
         single prefill entry (fresh prompts, preempt-resume, prefix-cache
         suffixes, and continuous-batching prefill chunks).
@@ -193,11 +226,15 @@ class Model:
         ``all_logits=True`` returns (B,S,V) logits for every lane
         instead of the last-valid-token slice — the speculative-decode
         verify path needs per-position argmax over the whole window
-        (padded lanes carry garbage; callers mask by ``seq_len``)."""
+        (padded lanes carry garbage; callers mask by ``seq_len``).
+
+        ``state_rows`` (B,) int32 maps dispatch rows to recurrent-state
+        slots (hybrid stacks); the returned caches for recurrent layers
+        are chunk-exit states to scatter back via those rows."""
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(f"{cfg.name}: paged prefill unsupported "
-                             "(needs a pure-attention decoder-only stack)")
+                             "(needs a decoder-only token stack)")
         s = batch["tokens"].shape[1]
         sp = jnp.asarray(start_pos, jnp.int32)
         # scalar cursor -> (S,); per-row (B,) cursors -> (B,S)
@@ -210,7 +247,8 @@ class Model:
                                posc if posc.ndim == 2 else posc[None])
         x, caches = tf.stack_prefill_paged(params["stack"], cfg, x, posc,
                                            pools, block_table, start_pos,
-                                           cache_max, seq_len=seq_len)
+                                           cache_max, seq_len=seq_len,
+                                           state_rows=state_rows)
         x = norm_apply(params["final_norm"], x, cfg.norm_kind)
         if all_logits:
             return unembed_apply(params["embed"], cfg, x), caches

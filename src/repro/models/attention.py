@@ -511,10 +511,17 @@ def attn_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
 
 
 def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
-                       start_pos, *, cache_max: int, seq_len=None):
+                       start_pos, *, kind: str = "attn", cache_max: int,
+                       seq_len=None):
     """Padding-masked position-offset prefill against a block-paged pool
     — the ONE paged prefill entry point (fresh prompts, preempt-resume,
     and prefix-cache suffixes all route here).
+
+    ``kind`` selects global ("attn") vs sliding-window ("attn_local")
+    masking; window layers add the band term ``qpos - kpos <
+    cfg.sliding_window`` over absolute positions and RoPE with the local
+    base (``_theta_for``), matching ``attn_apply``/``attn_decode_paged``
+    so chunked paged prefill stays token-identical to the slot path.
 
     x (B,S,D) holds a ragged batch of uncached suffix *chunks* — one
     row per request, each row's first token at absolute position
@@ -548,7 +555,8 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
     hd = cfg.resolved_head_dim
     kv = cfg.num_kv_heads
     b, s, _ = x.shape
-    q, k, v = _project_qkv(p, cfg, x, positions, rope, "attn")
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    q, k, v = _project_qkv(p, cfg, x, positions, rope, kind)
 
     bs = pool["pos"].shape[-1]
     nb = block_table.shape[1]
@@ -581,7 +589,8 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
 
     from repro.kernels import ops as kernel_ops
 
-    out = kernel_ops.paged_prefill(q, k_all, v_all, kpos_all, qpos)
+    out = kernel_ops.paged_prefill(q, k_all, v_all, kpos_all, qpos,
+                                   window=window)
     out = shard(out, "batch", "seq", "heads", "head_dim")
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     y = shard(y, "batch", "seq", "d_model")

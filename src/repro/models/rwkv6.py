@@ -68,16 +68,18 @@ def channel_mix_schema(cfg: ModelConfig):
     }
 
 
-def channel_mix(p, cfg: ModelConfig, x, x_prev):
+def channel_mix(p, cfg: ModelConfig, x, x_prev, seq_len=None):
     """RWKV channel-mix: squared-relu FFN on token-shifted input.
-    x (B,S,D), x_prev (B,D) -> (y, new_x_prev)."""
+    x (B,S,D), x_prev (B,D) -> (y, new_x_prev).  ``seq_len`` (B,) marks
+    each row's valid lanes when x is right-padded (ragged paged prefill):
+    the new ``x_prev`` is then the last *valid* lane, not lane S-1."""
     prev = _token_shift(x, x_prev)
     xk = x + (prev - x) * p["mu_k"]
     k = jnp.einsum("bsd,df->bsf", xk, p["wk_cm"])
     k = jnp.square(jax.nn.relu(k))
     k = shard(k, "batch", "seq", "d_ff")
     y = jnp.einsum("bsf,fd->bsd", k, p["wv_cm"])
-    return shard(y, "batch", "seq", "d_model"), x[:, -1, :]
+    return shard(y, "batch", "seq", "d_model"), _last_valid(x, seq_len)
 
 
 def init_state(cfg: ModelConfig, batch: int, dtype):
@@ -122,6 +124,15 @@ def _token_shift(x, x_prev):
     return shifted
 
 
+def _last_valid(x, seq_len):
+    """x (B,S,D) -> the lane seq_len-1 slice (B,D); lane S-1 when
+    ``seq_len`` is None (unpadded full-sequence path)."""
+    if seq_len is None:
+        return x[:, -1, :]
+    sl = jnp.asarray(seq_len, jnp.int32)
+    return jnp.take_along_axis(x, (sl - 1)[:, None, None], axis=1)[:, 0, :]
+
+
 def _mix_heads(p, cfg, x, xx):
     """Data-dependent token-shift mixing -> the five mixed streams."""
     mu = p["mu"]                                       # (5, D)
@@ -145,10 +156,16 @@ def _headnorm(o, scale, eps=1e-6):
     return o * jax.lax.rsqrt(ms + eps) * scale[None, None]
 
 
-def rwkv_time_mix(p, cfg: ModelConfig, x, state, allow_kernel: bool = False):
+def rwkv_time_mix(p, cfg: ModelConfig, x, state, allow_kernel: bool = False,
+                  seq_len=None):
     """x (B,S,D), state {"s","x_tm",...} -> (y (B,S,D), partial new state).
     Returns (y, {"s": ..., "x_tm": ...}); the caller merges "x_cm" after the
-    channel-mix."""
+    channel-mix.  ``seq_len`` (B,) marks each row's valid lanes when x is
+    right-padded (ragged paged prefill): the S recurrence freezes at lane
+    seq_len and ``x_tm`` is taken at lane seq_len-1, so the returned state
+    matches an unpadded run over the first seq_len tokens exactly.  The
+    masked path always uses the jnp scan — the chunked Pallas kernel has
+    no per-row length argument."""
     b, s, d = x.shape
     h, hd = num_heads(cfg), cfg.rwkv_head_dim
     prev = _token_shift(x, state["x_tm"])
@@ -165,11 +182,11 @@ def rwkv_time_mix(p, cfg: ModelConfig, x, state, allow_kernel: bool = False):
 
     from repro.kernels.ops import kernels_enabled
     # kernel path is inference-only (no custom VJP on the Pallas kernel)
-    if allow_kernel and kernels_enabled():
+    if allow_kernel and kernels_enabled() and seq_len is None:
         # TPU path: the chunked-parallel Pallas WKV kernel.
         out, s_final = _kernel_scan(r32, k32, v32, w, u, state["s"])
         o = out.transpose(0, 2, 1, 3)                   # (B,S,H,hd)
-    else:
+    elif seq_len is None:
         def step(S, t):
             r_t, k_t, v_t, w_t = t                      # (B,H,hd) each
             kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
@@ -181,10 +198,27 @@ def rwkv_time_mix(p, cfg: ModelConfig, x, state, allow_kernel: bool = False):
         xs = tuple(t.transpose(1, 0, 2, 3) for t in (r32, k32, v32, w))
         s_final, os_ = jax.lax.scan(step, state["s"], xs)
         o = os_.transpose(1, 0, 2, 3)                   # (B,S,H,hd)
+    else:
+        sl = jnp.asarray(seq_len, jnp.int32)
+
+        def step(S, t):
+            r_t, k_t, v_t, w_t, m_t = t                 # m_t (B,) lane valid
+            kv = k_t[..., :, None] * v_t[..., None, :]
+            o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                           S + u[None, :, :, None] * kv)
+            S_new = w_t[..., :, None] * S + kv
+            S = jnp.where(m_t[:, None, None, None], S_new, S)
+            return S, o
+
+        xs = tuple(t.transpose(1, 0, 2, 3) for t in (r32, k32, v32, w))
+        xs = xs + (jnp.arange(s, dtype=jnp.int32)[:, None] < sl[None, :],)
+        s_final, os_ = jax.lax.scan(step, state["s"], xs)
+        o = os_.transpose(1, 0, 2, 3)
     o = _headnorm(o, p["head_scale"].astype(jnp.float32))
     o = (o.reshape(b, s, d)).astype(x.dtype) * g
     y = jnp.einsum("bse,ed->bsd", o, p["wo"])
-    new_state = {"s": shard(s_final, *STATE_LOGICAL["s"]), "x_tm": x[:, -1, :]}
+    new_state = {"s": shard(s_final, *STATE_LOGICAL["s"]),
+                 "x_tm": _last_valid(x, seq_len)}
     return shard(y, "batch", "seq", "d_model"), new_state
 
 

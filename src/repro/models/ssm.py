@@ -110,10 +110,17 @@ STATE_LOGICAL = {
 }
 
 
-def ssm_forward(p, cfg: ModelConfig, x, state=None):
+def ssm_forward(p, cfg: ModelConfig, x, state=None, seq_len=None):
     """Forward over a (possibly long) sequence, returning final state.
-    x (B,S,D) -> (y (B,S,D), state)."""
-    b = x.shape[0]
+    x (B,S,D) -> (y (B,S,D), state).
+
+    ``seq_len`` (B,) int32 marks each row's valid lanes when ``x`` is
+    right-padded to a bucket (the paged engine's ragged chunk prefill):
+    the ``h`` recurrence freezes at lane ``seq_len`` and the conv state
+    is taken from the last ``W-1`` *valid* lanes, so the returned state
+    matches an unpadded run over the first ``seq_len`` tokens exactly.
+    Outputs at padded lanes are garbage the caller discards."""
+    b, s = x.shape[0], x.shape[1]
     if state is None:
         state = init_state(cfg, b, x.dtype)
     x_in, z = _split_proj(p, cfg, x)
@@ -121,20 +128,46 @@ def ssm_forward(p, cfg: ModelConfig, x, state=None):
     dt, bm, cm, xc = _selective_terms(p, cfg, x_c)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (di, N)
 
-    def step(h, t):
-        dt_t, b_t, c_t, x_t = t                          # (B,1)/(B,N)/(B,N)/(B,di)
-        decay = jnp.exp(dt_t[..., None] * a[None])       # (B,di,N)
-        h = decay * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
-        y = jnp.einsum("bdn,bn->bd", h, c_t)
-        return h, y
+    if seq_len is None:
+        def step(h, t):
+            dt_t, b_t, c_t, x_t = t                      # (B,1)/(B,N)/(B,N)/(B,di)
+            decay = jnp.exp(dt_t[..., None] * a[None])   # (B,di,N)
+            h = decay * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
 
-    xs = (
-        dt.transpose(1, 0, 2),                           # (S,B,1)
-        bm.transpose(1, 0, 2),
-        cm.transpose(1, 0, 2),
-        xc.transpose(1, 0, 2),
-    )
-    h_final, ys = jax.lax.scan(step, state["h"], xs)
+        xs = (
+            dt.transpose(1, 0, 2),                       # (S,B,1)
+            bm.transpose(1, 0, 2),
+            cm.transpose(1, 0, 2),
+            xc.transpose(1, 0, 2),
+        )
+        h_final, ys = jax.lax.scan(step, state["h"], xs)
+    else:
+        sl = jnp.asarray(seq_len, jnp.int32)
+        w = p["conv"].shape[0]
+        # conv state after ``sl`` valid tokens = lanes [sl, sl+w-2] of
+        # xp = [prev (w-1) | x_in (s)] (sl == s reproduces xp[:, -(w-1):])
+        xp = jnp.concatenate([state["conv"].astype(x_in.dtype), x_in], axis=1)
+        idx = sl[:, None] + jnp.arange(w - 1, dtype=jnp.int32)[None, :]
+        new_conv = jnp.take_along_axis(xp, idx[..., None], axis=1)
+
+        def step(h, t):
+            dt_t, b_t, c_t, x_t, m_t = t                 # m_t (B,) lane valid
+            decay = jnp.exp(dt_t[..., None] * a[None])
+            h_new = decay * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+            h_new = jnp.where(m_t[:, None, None], h_new, h)
+            y = jnp.einsum("bdn,bn->bd", h_new, c_t)
+            return h_new, y
+
+        xs = (
+            dt.transpose(1, 0, 2),
+            bm.transpose(1, 0, 2),
+            cm.transpose(1, 0, 2),
+            xc.transpose(1, 0, 2),
+            jnp.arange(s, dtype=jnp.int32)[:, None] < sl[None, :],  # (S,B)
+        )
+        h_final, ys = jax.lax.scan(step, state["h"], xs)
     y = ys.transpose(1, 0, 2).astype(x.dtype)            # (B,S,di)
     y = y * jax.nn.silu(z)
     out = jnp.einsum("bsd,do->bso", y, p["out_proj"])

@@ -293,21 +293,74 @@ def stack_decode(params, cfg: ModelConfig, x, caches, pos):
     return x, {"periods": new_period_caches, "rem": new_rem}
 
 
+def _state_read(pool, rows, start_pos, batch):
+    """Gather per-request recurrent-state slots from a state pool.
+
+    ``pool`` leaves lead with the slot axis (state_batch rows); ``rows``
+    (B,) int32 maps each dispatch row to its slot.  Rows whose chunk
+    starts at absolute position 0 read zeros instead of the slot — that
+    covers fresh admissions AND preempt-resume re-prefills without any
+    host-side slot reset (the stale slot contents are simply never
+    observed)."""
+    sp = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (batch,))
+    fresh = sp == 0
+
+    def read(leaf):
+        v = leaf[rows]
+        m = fresh.reshape((batch,) + (1,) * (v.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(v), v)
+
+    return {k: read(v) for k, v in pool.items()}
+
+
+def _recurrent_fwd(p, cfg: ModelConfig, x, st, *, kind: str, moe: bool,
+                   seq_len=None):
+    """Shared mamba/rwkv6 block body over an explicit state dict.
+    -> (x, new_state)."""
+    h = norm_apply(p["norm1"], x, cfg.norm_kind)
+    if kind == "mamba":
+        y, new_st = ssm_mod.ssm_forward(p["mix"], cfg, h, st, seq_len=seq_len)
+        x = x + y
+        h = norm_apply(p["norm2"], x, cfg.norm_kind)
+        y, _ = _ffn(p, cfg, h, moe)
+        return x + y, new_st
+    # rwkv6: two-norm structure — channel-mix replaces the FFN
+    y, part = rwkv_mod.rwkv_time_mix(p["mix"], cfg, h, st, seq_len=seq_len)
+    x = x + y
+    h2 = norm_apply(p["norm2"], x, cfg.norm_kind)
+    y2, x_cm = rwkv_mod.channel_mix(p["ffn"], cfg, h2, st["x_cm"],
+                                    seq_len=seq_len)
+    return x + y2, {"s": part["s"], "x_tm": part["x_tm"], "x_cm": x_cm}
+
+
 def block_decode_paged(p, cfg: ModelConfig, x, pool, block_table, pos, active,
                        *, kind: str, moe: bool, decode_kernel=None):
-    """One-token step against a block-paged pool (attention layers only —
-    SSM/RWKV states are O(1) per request, nothing to page).
-    ``decode_kernel``: Pallas kernel vs jnp gather (attn_decode_paged)."""
-    if kind not in ("attn", "attn_local"):
+    """One-token step against a block-paged pool.  Attention layers read
+    the block-paged KV pool; mamba/rwkv6 layers read per-request state
+    slots (row i of the dispatch IS slot i — the state pool just carries
+    one extra trash row for padded prefill dispatches).  ``decode_kernel``:
+    Pallas kernel vs jnp gather (attn_decode_paged)."""
+    if kind in ("attn", "attn_local"):
+        h = norm_apply(p["norm1"], x, cfg.norm_kind)
+        y, pool = attn.attn_decode_paged(p["mix"], cfg, h, pool, block_table,
+                                         pos, active, kind=kind,
+                                         decode_kernel=decode_kernel)
+        x = x + y
+        h = norm_apply(p["norm2"], x, cfg.norm_kind)
+        y, _ = _ffn(p, cfg, h, moe)
+        return x + y, pool
+    if kind not in ("mamba", "rwkv6"):
         raise ValueError(f"paged decode: unsupported layer kind {kind!r}")
-    h = norm_apply(p["norm1"], x, cfg.norm_kind)
-    y, pool = attn.attn_decode_paged(p["mix"], cfg, h, pool, block_table,
-                                     pos, active, kind=kind,
-                                     decode_kernel=decode_kernel)
-    x = x + y
-    h = norm_apply(p["norm2"], x, cfg.norm_kind)
-    y, _ = _ffn(p, cfg, h, moe)
-    return x + y, pool
+    b = x.shape[0]
+    st = {k: v[:b] for k, v in pool.items()}
+    out, new_st = _recurrent_fwd(p, cfg, x, st, kind=kind, moe=moe)
+
+    def upd(leaf, old, new):
+        keep = active.reshape((b,) + (1,) * (new.ndim - 1))
+        return leaf.at[:b].set(jnp.where(keep, new, old).astype(leaf.dtype))
+
+    pool = {k: upd(pool[k], st[k], new_st[k]) for k in pool}
+    return out, pool
 
 
 def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
@@ -347,31 +400,45 @@ def stack_decode_paged(params, cfg: ModelConfig, x, pools, block_table, pos,
 
 def block_prefill_paged(p, cfg: ModelConfig, x, positions, pool, block_table,
                         start_pos, *, kind: str, moe: bool, cache_max: int,
-                        seq_len=None):
+                        seq_len=None, state_rows=None):
     """Suffix-chunk prefill for one layer against its paged pool: each
     row attends to its cached prefix (through ``block_table`` — earlier
     chunks and/or prefix-cache matches) plus the chunk itself, and emits
     the chunk's decode cache for the engine to splice.  Ragged batches:
     ``start_pos`` may be (B,) per-row cursors with ``positions`` (B,S);
-    ``seq_len`` (B,) gives valid lanes when x is padded to a bucket."""
-    if kind != "attn":
+    ``seq_len`` (B,) gives valid lanes when x is padded to a bucket.
+    Recurrent layers (mamba/rwkv6) carry their chunk-entry state in
+    per-request slots instead of blocks: ``state_rows`` (B,) maps each
+    dispatch row to its slot, and the emitted "cache" is the chunk-exit
+    state for the engine to scatter back."""
+    if kind in ("attn", "attn_local"):
+        h = norm_apply(p["norm1"], x, cfg.norm_kind)
+        y, cache = attn.attn_prefill_paged(p["mix"], cfg, h, positions, pool,
+                                           block_table, start_pos, kind=kind,
+                                           cache_max=cache_max,
+                                           seq_len=seq_len)
+        x = x + y
+        h = norm_apply(p["norm2"], x, cfg.norm_kind)
+        y, _ = _ffn(p, cfg, h, moe)
+        return x + y, cache
+    if kind not in ("mamba", "rwkv6"):
         raise ValueError(f"paged prefill: unsupported layer kind {kind!r}")
-    h = norm_apply(p["norm1"], x, cfg.norm_kind)
-    y, cache = attn.attn_prefill_paged(p["mix"], cfg, h, positions, pool,
-                                       block_table, start_pos,
-                                       cache_max=cache_max, seq_len=seq_len)
-    x = x + y
-    h = norm_apply(p["norm2"], x, cfg.norm_kind)
-    y, _ = _ffn(p, cfg, h, moe)
-    return x + y, cache
+    b = x.shape[0]
+    rows = (jnp.arange(b, dtype=jnp.int32) if state_rows is None
+            else jnp.asarray(state_rows, jnp.int32))
+    st = _state_read(pool, rows, start_pos, b)
+    sl = None if seq_len is None else jnp.asarray(seq_len, jnp.int32)
+    return _recurrent_fwd(p, cfg, x, st, kind=kind, moe=moe, seq_len=sl)
 
 
 def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
                         block_table, start_pos, cache_max: int,
-                        seq_len=None):
+                        seq_len=None, state_rows=None):
     """-> (x, caches).  Same period scan as ``stack_decode_paged`` with
     the per-slot pools as scan xs; the per-layer suffix caches come out
-    as scan ys, mirroring ``stack_prefill``'s cache layout."""
+    as scan ys, mirroring ``stack_prefill``'s cache layout.  For
+    recurrent slots the "cache" is the chunk-exit state (B, ...) and
+    ``state_rows`` maps dispatch rows to state-pool slots."""
     p, n_per, n_rem = layout(cfg)
 
     def body(x, xs):
@@ -383,7 +450,7 @@ def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
                                        positions, period_pools[f"slot{j}"],
                                        block_table, start_pos, kind=kind,
                                        moe=moe, cache_max=cache_max,
-                                       seq_len=seq_len)
+                                       seq_len=seq_len, state_rows=state_rows)
             caches[f"slot{j}"] = c
         return x, caches
 
@@ -398,21 +465,28 @@ def stack_prefill_paged(params, cfg: ModelConfig, x, positions, pools,
                                    positions, pools["rem"][f"layer{j}"],
                                    block_table, start_pos, kind=kind,
                                    moe=moe, cache_max=cache_max,
-                                   seq_len=seq_len)
+                                   seq_len=seq_len, state_rows=state_rows)
         rem_caches[f"layer{j}"] = c
     return x, {"periods": period_caches, "rem": rem_caches}
 
 
 def stack_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int,
-                    dtype):
+                    dtype, state_batch: int = 1):
     """Concrete block pools for the whole stack, mirroring the cache
     layout (period-stacked leaves lead with ``n_periods``).  Pools are
     built at full ``block_size`` for every layer — sliding-window layers
     keep correctness through the window mask, not a ring clamp (rings
-    don't compose with block reuse)."""
+    don't compose with block reuse).  Recurrent layers (mamba/rwkv6) get
+    fixed-size per-request state slots instead of blocks: ``state_batch``
+    rows (the engine passes max_batch+1 — one slot per engine row plus a
+    trash row for padded dispatch rows)."""
     p, n_per, n_rem = layout(cfg)
 
     def one(kind):
+        if kind == "mamba":
+            return ssm_mod.init_state(cfg, state_batch, dtype)
+        if kind == "rwkv6":
+            return rwkv_mod.init_state(cfg, state_batch, dtype)
         if kind not in ("attn", "attn_local"):
             raise ValueError(f"paged pools: unsupported layer kind {kind!r}")
         return attn.paged_pool_init(cfg, num_blocks, block_size, dtype)

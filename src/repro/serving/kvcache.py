@@ -234,7 +234,7 @@ def write_prefill_blocks(pools: Any, single_cache: Any, block_ids: List[int],
 
 def write_chunk_tokens(pools: Any, caches: Any, src_rows: Any,
                        src_lanes: Any, dst_blocks: Any,
-                       dst_lanes: Any) -> Any:
+                       dst_lanes: Any, state_rows: Any = None) -> Any:
     """Batched ragged-chunk writeback: scatter every valid token of a
     ragged chunk-batch prefill cache (``Model.prefill_paged`` under
     continuous batching) into its (physical block, lane) pool home —
@@ -253,6 +253,13 @@ def write_chunk_tokens(pools: Any, caches: Any, src_rows: Any,
     (block, lane) pairs carry identical values, so the scatter is
     idempotent.
 
+    Recurrent-state leaves (``h``/``conv``/``s``/``x_tm``/``x_cm``) hold
+    per-request slots instead of token blocks: the cache carries one
+    chunk-exit state per dispatch row and ``state_rows`` (B,) maps row i
+    to its pool slot.  The engine routes padded dispatch rows to the
+    pool's trash slot (its last row), so duplicate scatters there are
+    harmless garbage.
+
     Layout (see transformer.stack_prefill_paged): "periods" leaves have
     batch at axis 1 behind the leading ``n_periods`` axis, "rem" leaves
     at axis 0; pool leaves put (num_blocks, block_size) at those same
@@ -262,18 +269,27 @@ def write_chunk_tokens(pools: Any, caches: Any, src_rows: Any,
     sl = jnp.asarray(src_lanes, jnp.int32)
     db = jnp.asarray(dst_blocks, jnp.int32)
     dl = jnp.asarray(dst_lanes, jnp.int32)
+    rows = None if state_rows is None else jnp.asarray(state_rows, jnp.int32)
 
-    def wr(axis):
-        def go(pool_leaf, cache_leaf):
+    def walk(pnode, cnode, axis):
+        out = {}
+        for name, pleaf in pnode.items():
+            if isinstance(pleaf, dict):
+                out[name] = walk(pleaf, cnode[name], axis)
+                continue
             pre = (slice(None),) * axis
-            vals = cache_leaf[pre + (sr, sl)].astype(pool_leaf.dtype)
-            return pool_leaf.at[pre + (db, dl)].set(vals)
-        return go
+            if name in _STATE_LEAVES:
+                assert rows is not None, "state pools need state_rows"
+                out[name] = pleaf.at[pre + (rows,)].set(
+                    cnode[name].astype(pleaf.dtype))
+            else:
+                vals = cnode[name][pre + (sr, sl)].astype(pleaf.dtype)
+                out[name] = pleaf.at[pre + (db, dl)].set(vals)
+        return out
 
-    return {"periods": jax.tree.map(wr(1), pools.get("periods", {}),
-                                    caches.get("periods", {})),
-            "rem": jax.tree.map(wr(0), pools.get("rem", {}),
-                                caches.get("rem", {}))}
+    return {"periods": walk(pools.get("periods", {}),
+                            caches.get("periods", {}), 1),
+            "rem": walk(pools.get("rem", {}), caches.get("rem", {}), 0)}
 
 
 # trailing (non-block) axes per pool-leaf name: leaves are shaped
@@ -281,6 +297,11 @@ def write_chunk_tokens(pools: Any, caches: Any, src_rows: Any,
 # carrying a leading n_periods axis, so the block axis is located from
 # the right.
 _POOL_LEAF_TAIL = {"pos": 0, "k_s": 1, "v_s": 1, "k": 2, "v": 2}
+
+# recurrent-state pool leaves (mamba h/conv, rwkv6 s/x_tm/x_cm): slot
+# axis instead of (num_blocks, block_size) — block-addressed ops skip
+# them (state moves by slot, never by block id).
+_STATE_LEAVES = frozenset({"h", "conv", "s", "x_tm", "x_cm"})
 
 
 def copy_blocks(pools: Any, src_ids: List[int], dst_ids: List[int]) -> Any:
@@ -299,6 +320,8 @@ def copy_blocks(pools: Any, src_ids: List[int], dst_ids: List[int]) -> Any:
         for name, leaf in node.items():
             if isinstance(leaf, dict):
                 out[name] = walk(leaf)
+            elif name in _STATE_LEAVES:
+                out[name] = leaf                # slots, not blocks: no-op
             else:
                 ax = leaf.ndim - 2 - _POOL_LEAF_TAIL[name]
                 pre = (slice(None),) * ax

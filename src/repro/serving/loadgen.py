@@ -231,6 +231,45 @@ def bursty_mixed_workload(*, num_bursts: int, burst_size: int,
 
 
 @dataclasses.dataclass
+class WindowedLongContextWorkload:
+    """Long prompts with long decode runs for a sliding-window stack —
+    the traffic shape where eager out-of-window block freeing pays.
+    Every context grows far past ``window``, so a window-blind pool
+    holds blocks for the whole growing context while window-aware
+    accounting caps each request at ceil(window/block)+1 live blocks."""
+
+    prompts: List[np.ndarray]
+    max_news: List[int]
+    window: int
+
+    @property
+    def total_prompt_tokens(self) -> int:
+        return sum(len(p) for p in self.prompts)
+
+    @property
+    def max_final_len(self) -> int:
+        return max(len(p) + n
+                   for p, n in zip(self.prompts, self.max_news))
+
+
+def windowed_long_context_workload(*, num_requests: int, vocab_size: int,
+                                   window: int, prompt_len: int = 20,
+                                   max_new: int = 24,
+                                   seed: int = 0) -> WindowedLongContextWorkload:
+    """Uniform-random prompts of ``prompt_len`` tokens (well past the
+    attention window) decoding ``max_new`` +- 25% continuation tokens —
+    the jitter staggers completions so the engine sees a mix of mid-
+    and late-decode requests, like a real long-generation batch."""
+    assert prompt_len > window, "long-context means prompts exceed the window"
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, vocab_size, prompt_len).astype(np.int32)
+               for _ in range(num_requests)]
+    lo = max(1, max_new - max_new // 4)
+    news = [int(rng.integers(lo, max_new + 1)) for _ in range(num_requests)]
+    return WindowedLongContextWorkload(prompts, news, window)
+
+
+@dataclasses.dataclass
 class RepetitiveWorkload:
     """Repetition-heavy prompts with long continuations — the traffic
     shape where n-gram / prompt-lookup speculative drafting is hot:

@@ -516,10 +516,11 @@ class PagedLLMEngine(_EngineObsMixin):
                  draft_model=None, draft_params=None,
                  admission_window: int = 4,
                  decode_fusion: bool = True,
+                 window_accounting: bool = True,
                  obs=None):
         if not model.supports_paged:
             raise ValueError(f"{model.cfg.name}: paged engine needs a "
-                             "pure-attention decoder-only stack")
+                             "decoder-only token stack")
         if scheduler not in ("continuous", "serial"):
             raise ValueError(f"scheduler must be 'continuous' or 'serial', "
                              f"got {scheduler!r}")
@@ -545,7 +546,35 @@ class PagedLLMEngine(_EngineObsMixin):
         self.eos_id = eos_id
         self.scheduler = scheduler
         self.allocator = BlockAllocator(num_blocks, block_size)
-        self.pools = model.pool_init(num_blocks, block_size)
+        # hybrid stacks: recurrent layers get one fixed-size state slot
+        # per engine row (+1 trash row for padded dispatch rows, index
+        # max_batch) beside the block pool — same scheduler governs both
+        self.has_state = model.paged_has_state
+        self.pools = model.pool_init(num_blocks, block_size,
+                                     state_batch=max_batch + 1)
+        if self.has_state and spec_decode != "off":
+            raise ValueError(
+                f"{model.cfg.name}: spec_decode needs roll-backable KV — "
+                "recurrent layer state cannot roll back on draft rejection")
+        # sliding-window residency bound: when EVERY layer's KV reach is
+        # bounded (no global-attention layer), a request only ever needs
+        # ceil(W/block_size)+1 live blocks — out-of-window blocks are
+        # freed eagerly (invalidate-on-release) so pool capacity
+        # multiplies.  ``window_accounting=False`` keeps the window-blind
+        # accounting (the benchmark baseline).
+        self.window_accounting = bool(window_accounting)
+        lw = model.paged_live_window() if self.window_accounting else None
+        self.live_window = lw
+        self.window_bound = None if lw is None else \
+            -(-lw // block_size) + 1
+        self.window_blocks_freed = 0
+        if self.has_state or lw is not None:
+            # recurrent state is not reconstructible from cached blocks,
+            # and eagerly-freed window chains would publish dangling
+            # block ids — radix prefix reuse is structurally off for
+            # both (constructing with prefix_cache=True stays legal; the
+            # stats gauge honestly reports prefix_cache=0)
+            prefix_cache = False
         self.prefix_cache: Optional[PrefixCache] = \
             PrefixCache(block_size) if prefix_cache else None
         self.nb_max = -(-max_len // block_size)
@@ -616,10 +645,10 @@ class PagedLLMEngine(_EngineObsMixin):
         bs = block_size
 
         def _prefill_entry(all_logits):
-            def go(p, b, pools, bt, sp, sl, cm):
+            def go(p, b, pools, bt, sp, sl, srows, cm):
                 logits, caches = model.prefill_paged(
                     p, b, pools, bt, sp, seq_len=sl, cache_max=cm,
-                    all_logits=all_logits)
+                    all_logits=all_logits, state_rows=srows)
                 # scatter indices derived on-device: lane j of row i
                 # holds absolute position start+j, living in block
                 # bt[i, (start+j)//bs]; invalid (padding) lanes route
@@ -639,12 +668,13 @@ class PagedLLMEngine(_EngineObsMixin):
                 slan = jnp.broadcast_to(lane, (r, c))
                 pools = write_chunk_tokens(pools, caches, sr.ravel(),
                                            slan.ravel(), db.ravel(),
-                                           (pos % bs).ravel())
+                                           (pos % bs).ravel(),
+                                           state_rows=srows)
                 pools = scrub_null_block(pools)
                 out = jnp.argmax(logits, axis=-1).astype(jnp.int32) \
                     if all_logits else logits
                 return out, pools
-            return jax.jit(go, static_argnums=6)
+            return jax.jit(go, static_argnums=7)
         self._prefill_paged = _prefill_entry(False)
         self._prefill_verify = _prefill_entry(True)
         self._decode = jax.jit(
@@ -770,6 +800,9 @@ class PagedLLMEngine(_EngineObsMixin):
             "decode_kernel": int(self._decode_kernel_on()),
             "decode_fusion": int(self._fused_decode),
             "admission_skips": self.admission_skips,
+            "window_blocks_freed": self.window_blocks_freed,
+            "state_slots_used": (len(self.active) + len(self.prefilling))
+                if self.has_state else 0,
             "spec_decode": self.spec_decode,
             "spec_k": self.spec_k if self.drafter is not None else 0,
             "accepted_tokens_per_step":
@@ -873,10 +906,44 @@ class PagedLLMEngine(_EngineObsMixin):
     def _free_blocks(self, blocks: List[int]) -> None:
         """Drop this request's hold; invalidate only the blocks whose
         last holder released (blocks the prefix cache still holds keep
-        their KV readable for future matches)."""
-        released = self.allocator.free(blocks)
+        their KV readable for future matches).  0 entries are window-
+        freed logical slots (already released) — skipped, never the
+        null block being double-freed."""
+        live = [b for b in blocks if b]
+        released = self.allocator.free(live)
         if released:
             self.pools = invalidate_blocks(self.pools, released)
+
+    def _window_shrink(self, blocks: List[int], next_pos: int,
+                       table=None) -> None:
+        """Eagerly release blocks that have slid wholly out of the live
+        window.  ``blocks`` keeps its LENGTH — logical slot l stays at
+        table column l so position arithmetic never shifts; freed
+        entries become 0 (the null block, which every read masks) both
+        in the list and in ``table`` (the engine's block_table row; None
+        while prefilling — chunk dispatches carry their own ragged
+        tables).  The write block ``next_pos // bs`` is always retained
+        (the min with ``next_pos // bs`` guards the W <= bs case), so a
+        request's live blocks never exceed ceil(W/bs)+1.  Window layers
+        never publish to the radix tree (prefix cache is off for bounded
+        stacks), so no freed block can carry a refcount>1 hold from
+        sharing — but ``_free_blocks`` still routes through the
+        allocator's refcounts, keeping the invariant checkable."""
+        if self.window_bound is None:
+            return
+        bs = self.block_size
+        dead = min(max(0, (next_pos - self.live_window + 1) // bs),
+                   next_pos // bs)
+        freed = []
+        for l in range(min(dead, len(blocks))):
+            if blocks[l]:
+                freed.append(blocks[l])
+                blocks[l] = 0
+                if table is not None:
+                    table[l] = 0
+        if freed:
+            self._free_blocks(freed)
+            self.window_blocks_freed += len(freed)
 
     def step(self, now: float = 0.0) -> List[GenRequest]:
         """One scheduler step.  Continuous (default): admit every
@@ -1056,7 +1123,8 @@ class PagedLLMEngine(_EngineObsMixin):
             budget = 0
         return sel, max(budget, 0)
 
-    def _ragged_dispatch(self, rows: List[tuple], *, all_logits: bool):
+    def _ragged_dispatch(self, rows: List[tuple], state_rows=None, *,
+                         all_logits: bool):
         """ONE bucketed masked dispatch over a ragged batch of rows —
         prefill chunks and (spec mode) verify windows share it.  Each
         row is ``(tokens, start, blocks)``: ``tokens`` (take,) land at
@@ -1070,7 +1138,12 @@ class PagedLLMEngine(_EngineObsMixin):
         output — (rows, 1, V) last-valid logit slices, or (rows, c_pad)
         per-lane greedy tokens when ``all_logits`` (the verify entry
         argmaxes on-device: acceptance needs every window position but
-        only as token ids)."""
+        only as token ids).
+
+        ``state_rows`` (one engine row per dispatch row, same order as
+        ``rows``) maps hybrid-stack dispatch rows to their recurrent
+        state slots; padding rows route to the trash slot (index
+        ``max_batch``)."""
         r_pad = self._bucket_rows(len(rows))
         # decode-only fused steps are all length-1 windows: dispatch at
         # c_pad=1 instead of padding every lane up to the first length
@@ -1089,11 +1162,15 @@ class PagedLLMEngine(_EngineObsMixin):
             starts[i] = start
             lens[i] = len(t)
             bt[i, :len(blocks)] = blocks
+        srows = np.full((r_pad,), self.max_batch, np.int32)   # trash slot
+        if state_rows is not None:
+            srows[:len(state_rows)] = state_rows
         self._prefill_sigs.add((r_pad, c_pad, nb_pad, all_logits))
         fn = self._prefill_verify if all_logits else self._prefill_paged
         out, self.pools = fn(
             self.params, {"tokens": toks}, self.pools, jnp.asarray(bt),
-            jnp.asarray(starts), jnp.asarray(lens), c_pad)
+            jnp.asarray(starts), jnp.asarray(lens), jnp.asarray(srows),
+            c_pad)
         return out
 
     def _chunk_rows(self, sel: List[tuple]) -> List[tuple]:
@@ -1113,6 +1190,9 @@ class PagedLLMEngine(_EngineObsMixin):
                 self.obs.prefill_chunk(st.req.rid, now, st.done, take)
             st.done += take
             self.prefill_tokens += take
+            # window stacks: blocks the chunk just slid out of the live
+            # window die immediately (next query position = st.done)
+            self._window_shrink(st.all_blocks, st.done)
             if st.done == len(st.seq):
                 self._finish_prefill(r, tok_at(i, take), now)
 
@@ -1123,6 +1203,7 @@ class PagedLLMEngine(_EngineObsMixin):
         verify dispatch in ``_spec_step``)."""
         sel, _ = self._select_chunks()
         logits = self._ragged_dispatch(self._chunk_rows(sel),
+                                       [r for r, _ in sel],
                                        all_logits=False)
         arr: List = [None]
 
@@ -1162,7 +1243,8 @@ class PagedLLMEngine(_EngineObsMixin):
             (np.asarray(w, np.int32), int(self.pos[r]), self.row_blocks[r])
             for r, w in verify]
         self._decode_batch_last = len(verify)
-        greedy = self._ragged_dispatch(rows, all_logits=True)
+        srows = [r for r, _ in sel] + [r for r, _ in verify]
+        greedy = self._ragged_dispatch(rows, srows, all_logits=True)
         arr = np.asarray(greedy)                  # (r_pad, c_pad) tokens
         nchunk = len(sel)
         self._account_chunks(sel, lambda i, take: int(arr[i, take - 1]),
@@ -1313,6 +1395,7 @@ class PagedLLMEngine(_EngineObsMixin):
             stale_b.append(np.asarray(blocks, np.int32)
                            [p // self.block_size])
             stale_l.append((p % self.block_size).astype(np.int32))
+        self._window_shrink(blocks, P + m, self.block_table[row])
         if self.obs and self.drafter is not None:
             self.obs.spec_verify(req.rid, now, proposed=take - 1,
                                  accepted=a, emitted=m, rolled_back=rolled)
@@ -1395,6 +1478,8 @@ class PagedLLMEngine(_EngineObsMixin):
             self.generated_tokens += 1
             self._note_token(req, now)
             self.pos[row] += 1
+            self._window_shrink(self.row_blocks[row], int(self.pos[row]),
+                                self.block_table[row])
         return self._collect(now)
 
     def _collect(self, now: float) -> List[GenRequest]:

@@ -95,6 +95,13 @@ SCHEMA = {
     "spec_rollbacks": GaugeSpec("verify rows that discarded "
                                 "speculatively written lanes (lifetime)",
                                 PAGED),
+    "window_blocks_freed": GaugeSpec(
+        "blocks eagerly released after sliding wholly out of the live "
+        "attention window (lifetime; 0 when some layer is global or "
+        "window accounting is off)", PAGED),
+    "state_slots_used": GaugeSpec(
+        "recurrent-state slots held by admitted requests (hybrid "
+        "mamba/rwkv6 stacks; 0 for pure-attention stacks)", PAGED),
     # ---- cluster tier (``serving/cluster.py``) ----
     "replicas": GaugeSpec("engine replicas in the fleet", CLUSTER),
     "affinity": GaugeSpec("1 when prefix-affinity routing is on",
